@@ -1,0 +1,77 @@
+"""Shared benchmark rig: one trained smoke model + workload, reused by all
+paper-figure benchmarks (params cached on disk so the suite trains once)."""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving.baselines import EngineRig, build_engine, fit_quality_estimator
+from repro.serving.engine import RequestResult, summarize
+from repro.serving.runner import ModelRunner
+from repro.serving.workload import Context, make_contexts, poisson_requests
+from repro.training.data import Pipeline, PipelineConfig
+from repro.training.optimizer import AdamWConfig, wsd_schedule
+from repro.training.train_step import init_train_state, make_train_step
+
+ARCH = "adaptcache-8b"          # the paper's serving model (Llama-3.1-8B)
+N_ACTIVE = 8_030_000_000
+CACHE = os.environ.get("REPRO_BENCH_CACHE", "experiments/bench_cache")
+
+
+def trained_runner(steps: int = 400, seed: int = 0) -> ModelRunner:
+    cfg = get_config(ARCH, smoke=True)
+    model = build_model(cfg)
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, f"params_{steps}_{seed}.pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            host = pickle.load(f)
+        params = jax.tree.map(jnp.asarray, host)
+    else:
+        opt = AdamWConfig(lr=wsd_schedule(3e-3, 20, steps // 2, steps // 3))
+        state = init_train_state(model, jax.random.key(seed), opt)
+        step = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+        pipe = Pipeline(PipelineConfig(cfg.vocab_size, 192, 16,
+                                       kind="recall", seed=seed))
+        for _ in range(steps):
+            b = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+            state, m = step(state, b)
+        params = state.params
+        with open(path, "wb") as f:
+            pickle.dump(jax.tree.map(lambda x: np.asarray(x), params), f)
+    return ModelRunner(model, params, capacity=768)
+
+
+def workload(seed: int = 1, n_per_task: int = 3, rate_hz: float = 0.7,
+             duration_s: float = 48.0) -> Tuple[List[Context], list]:
+    rng = np.random.RandomState(seed)
+    cfg = get_config(ARCH, smoke=True)
+    contexts = make_contexts(rng, cfg.vocab_size, n_per_task, min_len=128,
+                             max_len=320, n_probes=2)
+    requests = poisson_requests(rng, contexts, rate_hz, duration_s,
+                                max_new_tokens=12)
+    return contexts, requests
+
+
+def run_policy(runner, contexts, requests, policy, alpha=0.01,
+               dram_entries=2.5, ssd_entries=10.0, fitted_qe=None,
+               tmp=None):
+    full = get_config(ARCH)
+    rig = build_engine(runner, contexts, full, N_ACTIVE, policy=policy,
+                       alpha=alpha, dram_entries=dram_entries,
+                       ssd_entries=ssd_entries, quality_est=fitted_qe,
+                       ssd_root=tmp)
+    results = rig.engine.process(requests)
+    return summarize(results), results, rig
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,26 @@
+"""Estimator profiling (paper §2 'Estimator'): quality-vs-rate curves per
+(task, method) measured by compress -> generate -> compare on sampled
+entries — the offline pass whose output drives the policy optimizer."""
+from __future__ import annotations
+
+from benchmarks.common import ARCH, N_ACTIVE, trained_runner, workload
+from repro.configs import get_config
+from repro.serving.baselines import build_engine, fit_quality_estimator
+
+
+def main(out_csv: str = "experiments/estimator_curves.csv") -> None:
+    runner = trained_runner()
+    contexts, _ = workload()
+    rig = build_engine(runner, contexts, get_config(ARCH), N_ACTIVE,
+                       policy="adaptive")
+    qe = fit_quality_estimator(rig, contexts, samples_per_task=2)
+    with open(out_csv, "w") as f:
+        f.write("task,method,rate,quality\n")
+        for (task, method), curve in sorted(qe.curves.items()):
+            for rate, q in curve:
+                f.write(f"{task},{method},{rate:.4f},{q:.4f}\n")
+                print(f"{task:14s} {method:14s} rate={rate:.3f} q={q:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Micro-benchmarks of the Pallas kernels' jnp fallbacks + interpret-mode
+correctness cost (CPU wall times are NOT TPU projections; the roofline
+table carries the TPU numbers — this harness tracks relative regressions).
+Prints ``name,us_per_call,derived`` CSV per the benchmark contract."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.kivi import ops as kivi_ops
+
+
+def timeit(fn, *args, reps=5):
+    fn(*args)                              # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main() -> None:
+    rng = np.random.RandomState(0)
+    rows = []
+    for T, F in [(1024, 512), (4096, 1024)]:
+        x = jnp.asarray(rng.randn(T, F).astype(np.float32))
+        for bits in (2, 4, 8):
+            us = timeit(lambda a: kivi_ops.quantize(a, bits, 64, 0), x)
+            qt = kivi_ops.quantize(x, bits, 64, 0)
+            ratio = (qt.packed.nbytes + qt.scale.nbytes + qt.zero.nbytes) \
+                / x.nbytes
+            rows.append(f"kivi_quant_{T}x{F}_{bits}b,{us:.1f},"
+                        f"ratio={ratio:.3f}")
+            us = timeit(lambda q: kivi_ops.dequantize(q), qt)
+            rows.append(f"kivi_dequant_{T}x{F}_{bits}b,{us:.1f},")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline):
+reads experiments/dryrun_*.json and prints per-cell terms + bottleneck."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+
+def load(path: str) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_table(cells: List[dict]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':8s} "
+           f"{'t_comp(ms)':>10s} {'t_mem(ms)':>10s} {'t_coll(ms)':>10s} "
+           f"{'bound':>10s} {'useful':>6s} {'roofline%':>9s}")
+    lines = [hdr, "-" * len(hdr)]
+    for c in cells:
+        if c.get("status") == "skipped":
+            lines.append(f"{c['arch']:22s} {c['shape']:12s} {c['mesh']:8s} "
+                         f"{'—':>10s} {'—':>10s} {'—':>10s} "
+                         f"{'skipped':>10s}")
+            continue
+        if c.get("status") != "ok":
+            lines.append(f"{c['arch']:22s} {c['shape']:12s} ERROR")
+            continue
+        lines.append(
+            f"{c['arch']:22s} {c['shape']:12s} {c['mesh']:8s} "
+            f"{c['t_compute_s']*1e3:10.2f} {c['t_memory_s']*1e3:10.2f} "
+            f"{c['t_collective_s']*1e3:10.2f} {c['bottleneck']:>10s} "
+            f"{c['useful_flops_ratio']:6.2f} "
+            f"{c['roofline_fraction']*100:8.1f}%")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    for mesh_file in ("experiments/dryrun_single_pod.json",
+                      "experiments/dryrun_multi_pod.json"):
+        cells = load(mesh_file)
+        if not cells:
+            print(f"({mesh_file} missing — run the dry-run first)")
+            continue
+        print(f"\n=== {mesh_file} ===")
+        print(fmt_table(cells))
+        ok = [c for c in cells if c.get("status") == "ok"]
+        if ok:
+            import numpy as np
+            fr = [c["roofline_fraction"] for c in ok]
+            print(f"\ncells={len(ok)} "
+                  f"median_roofline={100*float(np.median(fr)):.1f}% "
+                  f"worst={100*min(fr):.1f}% best={100*max(fr):.1f}%")
+
+
+if __name__ == "__main__":
+    main()

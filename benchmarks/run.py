@@ -1,0 +1,52 @@
+"""Benchmark suite entry: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+  fig1_hitrate        Fig. 1 — hit-rate / load-delay / quality triangle
+  fig2_ttft_quality   Fig. 2 — TTFT vs quality Pareto, 3 tasks x 9 policies
+  tab_alpha_hitrate   §3     — DRAM hit rate vs alpha sweep
+  estimator_curves    §2     — offline quality-rate profiling
+  kernel_bench        —      — Pallas-op microbenches (CSV contract)
+  roofline_bench      §Roofline — table from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="kernel + roofline only (no engine runs)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    os.makedirs("experiments", exist_ok=True)
+    from benchmarks import (estimator_curves, fig1_hitrate,
+                            fig2_ttft_quality, kernel_bench, roofline_bench,
+                            tab_alpha_hitrate)
+    suites = [
+        ("kernel_bench", kernel_bench.main),
+        ("roofline_bench", roofline_bench.main),
+    ]
+    if not args.quick:
+        suites += [
+            ("estimator_curves", estimator_curves.main),
+            ("fig1_hitrate", fig1_hitrate.main),
+            ("fig2_ttft_quality", fig2_ttft_quality.main),
+            ("tab_alpha_hitrate", tab_alpha_hitrate.main),
+        ]
+    for name, fn in suites:
+        if args.only and args.only != name:
+            continue
+        print(f"\n##### {name} #####")
+        t0 = time.time()
+        fn()
+        print(f"name={name},elapsed_s={time.time()-t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

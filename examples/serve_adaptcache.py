@@ -1,0 +1,23 @@
+"""End-to-end serving driver (deliverable b): trains the smoke model, fits
+the paper's offline quality estimator, then serves a Poisson workload with
+AdaptCache and prints the TTFT/quality/hit-rate summary vs two baselines.
+
+    PYTHONPATH=src python examples/serve_adaptcache.py
+"""
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    for policy in ("adaptive", "kivi:0.16", "prefill"):
+        print(f"\n================ policy={policy} ================")
+        serve.main(["--arch", "adaptcache-8b", "--policy", policy,
+                    "--alpha", "0.01", "--rate", "0.5",
+                    "--duration", "60", "--train-steps", "100",
+                    "--contexts-per-task", "3"]
+                   + (["--fit-estimator"] if policy == "adaptive" else []))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,29 @@
+"""Train a small model for a few hundred steps with checkpoint/resume
+(deliverable b, training flavor) — then kill/resume to demo fault tolerance.
+
+    PYTHONPATH=src python examples/train_small.py
+"""
+import shutil
+import sys
+import tempfile
+
+from repro.launch import train
+
+
+def main():
+    ckpt = tempfile.mkdtemp(prefix="repro_ckpt_")
+    try:
+        print("== phase 1: train 120 steps with checkpoints every 40 ==")
+        train.main(["--arch", "smollm-135m", "--smoke", "--steps", "120",
+                    "--batch", "8", "--seq", "128", "--ckpt-dir", ckpt,
+                    "--ckpt-every", "40"])
+        print("\n== phase 2: simulate restart — resume to 200 steps ==")
+        train.main(["--arch", "smollm-135m", "--smoke", "--steps", "200",
+                    "--batch", "8", "--seq", "128", "--ckpt-dir", ckpt,
+                    "--ckpt-every", "40", "--resume"])
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

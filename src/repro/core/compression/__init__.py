@@ -1,0 +1,18 @@
+from typing import Dict
+
+from repro.core.compression.base import (  # noqa: F401
+    CompressedEntry, CompressionMethod, KVData, NoCompression, kv_nbytes,
+    kv_num_tokens,
+)
+from repro.core.compression.kivi import KIVICompression  # noqa: F401
+from repro.core.compression.mixed import DropQuantCompression  # noqa: F401
+from repro.core.compression.streaming_llm import StreamingLLMCompression  # noqa: F401
+
+
+def default_registry() -> Dict[str, CompressionMethod]:
+    return {
+        "none": NoCompression(),
+        "kivi": KIVICompression(),
+        "streaming_llm": StreamingLLMCompression(),
+        "drop_kivi": DropQuantCompression(),
+    }

@@ -1,0 +1,142 @@
+"""AdaptCacheController: the facade tying estimator + policy + executor.
+
+Serving-engine contract:
+    insert(key, kv, task_type)  — store a freshly prefetched KV entry
+    fetch(key)                  — load on hit; returns (kv, delay breakdown)
+    lookup(key)                 — tier name or None
+    stats()                     — hit rates per tier, byte counters
+
+Capacity is enforced by the greedy MCKP loop: after any byte growth in a
+tier, apply minimal-marginal-utility-drop moves until all tiers fit
+(demotions cascade fast tier -> slow tier -> eviction).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.compression.base import KVData, kv_nbytes, kv_num_tokens
+from repro.core.entry import EntryMeta
+from repro.core.estimator import (
+    DelayProfile, FrequencyEstimator, QualityEstimator, redundancy_feature,
+)
+from repro.core.executor import Executor
+from repro.core.policy import AdaptivePolicy, BasePolicy, Placement
+from repro.storage.tier import Tier
+
+
+@dataclasses.dataclass
+class FetchResult:
+    kv: KVData
+    tier: str
+    method: str
+    rate: float
+    load_delay_s: float
+    decompress_delay_s: float
+    nbytes: int
+
+    @property
+    def total_delay_s(self) -> float:
+        return self.load_delay_s + self.decompress_delay_s
+
+
+class AdaptCacheController:
+    def __init__(self, methods, tiers: Dict[str, Tier],
+                 tier_order: Sequence[str], policy: BasePolicy,
+                 delay_profile: DelayProfile,
+                 freq: FrequencyEstimator,
+                 clock=time.monotonic):
+        self.methods = methods
+        self.tiers = tiers
+        self.tier_order = list(tier_order)
+        self.policy = policy
+        self.delay_profile = delay_profile
+        self.freq = freq
+        self.clock = clock
+        self.executor = Executor(methods, tiers, tier_order)
+        self.meta: Dict[str, EntryMeta] = {}
+        self.counters = {"hits": 0, "misses": 0, "inserts": 0,
+                         **{f"hit_{t}": 0 for t in tier_order}}
+
+    # -- public API -----------------------------------------------------------
+    def lookup(self, key: str) -> Optional[str]:
+        m = self.meta.get(key)
+        return m.tier if m and m.tier else None
+
+    def insert(self, key: str, kv: KVData, task_type: str,
+               now: Optional[float] = None) -> Placement:
+        now = self.clock() if now is None else now
+        if key in self.meta and self.meta[key].tier:
+            return Placement(self.meta[key].tier, self.meta[key].method,
+                             self.meta[key].rate)
+        meta = EntryMeta(key=key, task_type=task_type,
+                         n_tokens=kv_num_tokens(kv),
+                         orig_bytes=kv_nbytes(kv),
+                         redundancy=redundancy_feature(kv),
+                         created_at=now)
+        placement = self.policy.admit(meta, kv)
+        self.executor.store(meta, kv, placement)
+        self.meta[key] = meta
+        self.freq.on_insert(key, now)
+        self.counters["inserts"] += 1
+        self._enforce(placement.tier, now)
+        return placement
+
+    def fetch(self, key: str, now: Optional[float] = None
+              ) -> Optional[FetchResult]:
+        now = self.clock() if now is None else now
+        meta = self.meta.get(key)
+        if meta is None or meta.tier is None:
+            self.counters["misses"] += 1
+            return None
+        tier = self.tiers[meta.tier]
+        kv, entry = self.executor.fetch(meta)
+        load = tier.load_delay(meta.nbytes)
+        dec = self.delay_profile.decompress_delay(meta.method, meta.nbytes)
+        meta.hits += 1
+        meta.last_hit = now
+        self.freq.on_hit(key, now)
+        self.counters["hits"] += 1
+        self.counters[f"hit_{meta.tier}"] += 1
+        return FetchResult(kv, meta.tier, meta.method, meta.rate,
+                           load, dec, meta.nbytes)
+
+    # -- capacity enforcement ---------------------------------------------------
+    def _entries_in(self, tier_name: str):
+        return [m for m in self.meta.values() if m.tier == tier_name]
+
+    def _enforce(self, start_tier: str, now: float, max_moves: int = 10000):
+        pending = [start_tier]
+        moves = 0
+        while pending and moves < max_moves:
+            tname = pending.pop()
+            tier = self.tiers[tname]
+            while tier.used_bytes > tier.spec.capacity_bytes:
+                entries = self._entries_in(tname)
+                if not entries:
+                    break
+                move = self.policy.pick_move(
+                    tname, entries, now,
+                    kv_lookup=self.executor.proxies.get)
+                if move is None:
+                    break
+                affected = self.executor.apply(move, self.meta[move.key])
+                moves += 1
+                if affected and affected not in pending:
+                    pending.append(affected)
+                if moves >= max_moves:
+                    break
+
+    # -- stats ------------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        total = self.counters["hits"] + self.counters["misses"]
+        out = dict(self.counters)
+        out.update(self.executor.stats)
+        out["lookup_total"] = total
+        out["hit_rate"] = self.counters["hits"] / total if total else 0.0
+        for t in self.tier_order:
+            out[f"hit_rate_{t}"] = (self.counters[f"hit_{t}"] / total
+                                    if total else 0.0)
+            out[f"used_{t}"] = self.tiers[t].used_bytes
+        return out

@@ -1,0 +1,23 @@
+"""Per-entry metadata tracked by the AdaptCache controller."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class EntryMeta:
+    key: str
+    task_type: str
+    n_tokens: int
+    orig_bytes: int
+    redundancy: float               # estimator feature in [0, 1]
+    created_at: float
+    # current placement
+    tier: Optional[str] = None      # "dram" | "ssd" | None (evicted)
+    method: str = "none"
+    rate: float = 1.0
+    nbytes: int = 0
+    # stats
+    hits: int = 0
+    last_hit: float = 0.0

@@ -1,0 +1,114 @@
+"""AdaptCache Executor (paper §2): applies policy decisions to the tiers.
+
+Owns the mechanical half of the system: compressing entries, moving bytes
+between tiers, evicting, and keeping lightweight *shape proxies* so the
+policy can evaluate candidate states without touching stored bytes.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.compression.base import (
+    CompressedEntry, CompressionMethod, KVData,
+)
+from repro.core.entry import EntryMeta
+from repro.core.policy import Move, Placement
+from repro.storage.tier import Tier
+
+
+def shape_proxy(kv: KVData) -> KVData:
+    """Zero-storage stand-in with identical shapes/dtypes (for estimates)."""
+    return {k: np.broadcast_to(np.zeros((), a.dtype), a.shape)
+            for k, a in kv.items()}
+
+
+class Executor:
+    def __init__(self, methods: Dict[str, CompressionMethod],
+                 tiers: Dict[str, Tier], tier_order):
+        self.methods = methods
+        self.tiers = tiers
+        self.tier_order = list(tier_order)
+        self.proxies: Dict[str, KVData] = {}
+        self.stats = {"recompress": 0, "demote": 0, "evict": 0,
+                      "bytes_moved": 0}
+
+    # -- store ---------------------------------------------------------------
+    def store(self, meta: EntryMeta, kv: KVData, placement: Placement) -> int:
+        m = self.methods[placement.method]
+        entry = m.compress(kv, placement.rate)
+        nb = self.tiers[placement.tier].put(meta.key, entry)
+        meta.tier = placement.tier
+        meta.method = placement.method
+        meta.rate = entry.rate
+        meta.nbytes = nb
+        self.proxies[meta.key] = shape_proxy(self._decompressed_view(entry, m))
+        return nb
+
+    def _decompressed_view(self, entry: CompressedEntry,
+                           m: CompressionMethod) -> KVData:
+        """Shapes of the entry after decompression, without decompressing.
+
+        For drop-based methods the kept-token count lives in the stored
+        arrays themselves; we reconstruct shape-only views cheaply."""
+        if entry.method == "none":
+            return dict(entry.arrays)
+        if entry.method == "streaming_llm":
+            return dict(entry.arrays)
+        # kivi / drop_kivi: meta["shape"] holds decompressed shapes
+        meta_shape = entry.meta["kivi"]["shape"] if "kivi" in entry.meta \
+            else entry.meta["shape"]
+        out = {k: np.broadcast_to(np.zeros((), np.float32), s)
+               for k, s in meta_shape.items()}
+        if "positions" in entry.arrays:
+            out["positions"] = entry.arrays["positions"]
+        return out
+
+    # -- fetch ---------------------------------------------------------------
+    def fetch(self, meta: EntryMeta) -> Tuple[KVData, CompressedEntry]:
+        tier = self.tiers[meta.tier]
+        entry = tier.get(meta.key)
+        kv = self.methods[meta.method].decompress(entry)
+        return kv, entry
+
+    # -- moves ---------------------------------------------------------------
+    def apply(self, move: Move, meta: EntryMeta) -> Optional[str]:
+        """Returns the name of a tier whose capacity may now be violated."""
+        tier = self.tiers[move.tier]
+        if move.kind == "evict":
+            tier.evict(meta.key)
+            meta.tier = None
+            meta.nbytes = 0
+            self.proxies.pop(meta.key, None)
+            self.stats["evict"] += 1
+            return None
+
+        if move.kind == "demote":
+            t_idx = self.tier_order.index(move.tier)
+            dst = self.tiers[self.tier_order[t_idx + 1]]
+            entry = tier.get(meta.key)
+            tier.evict(meta.key)
+            dst.put(meta.key, entry)
+            meta.tier = self.tier_order[t_idx + 1]
+            self.stats["demote"] += 1
+            self.stats["bytes_moved"] += entry.nbytes
+            return meta.tier
+
+        if move.kind == "recompress":
+            entry = tier.get(meta.key)
+            kv = self.methods[meta.method].decompress(entry)
+            m = self.methods[move.method]
+            new_entry = m.compress(kv, move.rate)
+            tier.evict(meta.key)
+            nb = tier.put(meta.key, new_entry)
+            meta.method = move.method
+            meta.rate = new_entry.rate
+            meta.nbytes = nb
+            self.proxies[meta.key] = shape_proxy(
+                self._decompressed_view(new_entry, m))
+            self.stats["recompress"] += 1
+            return None
+
+        raise ValueError(move.kind)

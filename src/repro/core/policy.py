@@ -1,0 +1,204 @@
+"""AdaptCache policy optimizer: utility-driven greedy MCKP (paper §2).
+
+    Utility(i) = Freq(i) · (α·Quality(i, M, R) − Delay(i, M, R, tier))
+    Delay      = size/Bandwidth(tier) + latency + decompress(method, size)
+
+Total utility across entries subject to per-tier capacities is a
+Multiple-Choice Knapsack — NP-hard; following the paper we apply the
+textbook greedy (Kellerer et al. §11) on **marginal utility drop per byte
+freed**: whenever a tier is over capacity, the cheapest move is applied:
+
+    move ∈ { compress further (any method, any smaller rate),
+             demote to the next tier (same method/rate),
+             evict (from the last tier) }
+
+    drop/byte = (U_before − U_after) / bytes_freed_in_this_tier
+
+which is exactly the paper's (U(i,m) − U(i,n)) / (size(i)·(m−n)) with our
+size bookkeeping. FixedPolicy implements the baselines (no-compression LRU,
+KIVI LRU, StreamingLLM LRU) on the same machinery so the comparison is
+apples-to-apples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.compression.base import CompressionMethod, KVData
+from repro.core.entry import EntryMeta
+from repro.core.estimator import DelayProfile, FrequencyEstimator, QualityEstimator
+from repro.storage.tier import Tier
+
+
+@dataclasses.dataclass(frozen=True)
+class Move:
+    key: str
+    kind: str                       # "recompress" | "demote" | "evict"
+    tier: str                       # tier the move frees bytes in
+    method: str = "none"            # target method (recompress)
+    rate: float = 1.0               # target rate (recompress)
+    bytes_freed: int = 0
+    drop_per_byte: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    tier: str
+    method: str
+    rate: float
+
+
+class BasePolicy:
+    """Interface used by the controller."""
+
+    def admit(self, meta: EntryMeta, kv: KVData) -> Placement:
+        raise NotImplementedError
+
+    def pick_move(self, tier_name: str, entries: Sequence[EntryMeta],
+                  now: float) -> Optional[Move]:
+        raise NotImplementedError
+
+
+class AdaptivePolicy(BasePolicy):
+    """The paper's policy."""
+
+    def __init__(self, methods: Dict[str, CompressionMethod],
+                 tiers: Dict[str, Tier], tier_order: Sequence[str],
+                 quality: QualityEstimator, freq: FrequencyEstimator,
+                 delay_profile: DelayProfile, alpha: float = 1.0):
+        self.methods = methods
+        self.tiers = tiers
+        self.tier_order = list(tier_order)      # fast -> slow
+        self.quality = quality
+        self.freq = freq
+        self.delay = delay_profile
+        self.alpha = alpha
+
+    # -- utility ------------------------------------------------------------
+    def _delay_term(self, tier_name: str, method: str, nbytes: int) -> float:
+        tier = self.tiers[tier_name]
+        return (tier.load_delay(nbytes)
+                + self.delay.decompress_delay(method, nbytes))
+
+    def utility(self, meta: EntryMeta, tier_name: str, method: str,
+                rate: float, nbytes: int, now: float) -> float:
+        f = self.freq.predict(meta.key, now)
+        q = self.quality.predict(meta.task_type, method, rate, meta.redundancy)
+        return f * (self.alpha * q - self._delay_term(tier_name, method, nbytes))
+
+    def current_utility(self, meta: EntryMeta, now: float) -> float:
+        return self.utility(meta, meta.tier, meta.method, meta.rate,
+                            meta.nbytes, now)
+
+    # -- candidate enumeration ------------------------------------------------
+    def _candidate_states(self, meta: EntryMeta, kv_like: KVData
+                          ) -> List[Tuple[str, float, int]]:
+        """(method, rate, est_nbytes) states strictly smaller than current."""
+        out = []
+        if kv_like is None:
+            return out
+        for mname, m in self.methods.items():
+            if not m.applicable(kv_like):
+                continue
+            for rate in m.rates(kv_like):
+                nb = m.estimate_nbytes(kv_like, rate)
+                if nb < meta.nbytes:
+                    out.append((mname, rate, nb))
+        return out
+
+    # -- admission ------------------------------------------------------------
+    def admit(self, meta: EntryMeta, kv: KVData) -> Placement:
+        """Choose the (tier, method, rate) with max utility for a new entry,
+        preferring states that fit the fast tier without displacing
+        higher-marginal-utility residents (the subsequent enforce pass
+        settles global feasibility)."""
+        now = meta.created_at
+        best: Tuple[float, Placement] = (-math.inf, Placement(
+            self.tier_order[-1], "none", 1.0))
+        for tier_name in self.tier_order:
+            for mname, m in self.methods.items():
+                if not m.applicable(kv):
+                    continue
+                for rate in m.rates(kv):
+                    nb = m.estimate_nbytes(kv, rate)
+                    u = self.utility(meta, tier_name, mname, rate, nb, now)
+                    if u > best[0]:
+                        best = (u, Placement(tier_name, mname, rate))
+        return best[1]
+
+    # -- capacity enforcement ---------------------------------------------------
+    def pick_move(self, tier_name: str, entries: Sequence[EntryMeta],
+                  now: float, kv_lookup=None) -> Optional[Move]:
+        """Minimal marginal-utility-drop move freeing bytes in tier_name."""
+        t_idx = self.tier_order.index(tier_name)
+        next_tier = (self.tier_order[t_idx + 1]
+                     if t_idx + 1 < len(self.tier_order) else None)
+        best: Optional[Move] = None
+
+        for meta in entries:
+            u_cur = self.current_utility(meta, now)
+            kv_like = kv_lookup(meta.key) if kv_lookup else None
+
+            # (a) recompress in place
+            for mname, rate, nb in self._candidate_states(meta, kv_like):
+                freed = meta.nbytes - nb
+                if freed <= 0:
+                    continue
+                u_new = self.utility(meta, tier_name, mname, rate, nb, now)
+                drop = (u_cur - u_new) / freed
+                if best is None or drop < best.drop_per_byte:
+                    best = Move(meta.key, "recompress", tier_name, mname,
+                                rate, freed, drop)
+
+            # (b) demote to next tier (same state)
+            if next_tier is not None:
+                u_new = self.utility(meta, next_tier, meta.method, meta.rate,
+                                     meta.nbytes, now)
+                drop = (u_cur - u_new) / meta.nbytes
+                if best is None or drop < best.drop_per_byte:
+                    best = Move(meta.key, "demote", tier_name, meta.method,
+                                meta.rate, meta.nbytes, drop)
+
+            # (c) evict (last tier only)
+            if next_tier is None:
+                drop = max(u_cur, 0.0) / meta.nbytes
+                if best is None or drop < best.drop_per_byte:
+                    best = Move(meta.key, "evict", tier_name, meta.method,
+                                meta.rate, meta.nbytes, drop)
+        return best
+
+
+class FixedPolicy(BasePolicy):
+    """Baselines: fixed (method, rate) + LRU demotion/eviction.
+
+    method='none'          -> Without-Compression baseline
+    method='kivi', rate    -> KIVI LRU
+    method='streaming_llm' -> StreamingLLM LRU
+    """
+
+    def __init__(self, methods: Dict[str, CompressionMethod],
+                 tier_order: Sequence[str], method: str, rate: float):
+        self.methods = methods
+        self.tier_order = list(tier_order)
+        self.method = method
+        self.rate = rate
+
+    def admit(self, meta: EntryMeta, kv: KVData) -> Placement:
+        m = self.methods[self.method]
+        rate = (m.closest_rate(kv, self.rate)
+                if m.applicable(kv) else 1.0)
+        method = self.method if m.applicable(kv) else "none"
+        return Placement(self.tier_order[0], method, rate)
+
+    def pick_move(self, tier_name: str, entries: Sequence[EntryMeta],
+                  now: float, kv_lookup=None) -> Optional[Move]:
+        if not entries:
+            return None
+        lru = min(entries, key=lambda e: e.last_hit or e.created_at)
+        t_idx = self.tier_order.index(tier_name)
+        if t_idx + 1 < len(self.tier_order):
+            return Move(lru.key, "demote", tier_name, lru.method, lru.rate,
+                        lru.nbytes, 0.0)
+        return Move(lru.key, "evict", tier_name, lru.method, lru.rate,
+                    lru.nbytes, 0.0)

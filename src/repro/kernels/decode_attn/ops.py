@@ -1,0 +1,75 @@
+"""jit'd wrapper: batched GQA decode attention over KIVI-packed KV.
+
+Takes model-layout tensors and maps them onto the per-(batch*kv_head)-plane
+kernel:
+    q   (B, H, hd)
+    kq  Quantized of K reshaped (B*Kv planes):   packed (B, T/cpb, Kv, hd)...
+Here we keep the plane-major layout explicit at this boundary; the serving
+engine stores packed KV plane-major already (one contiguous buffer per
+entry, ready for DMA).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn import kernel as _k
+from repro.kernels.decode_attn import ref as _r
+
+
+def _use_pallas() -> bool:
+    return (jax.default_backend() == "tpu"
+            or os.environ.get("REPRO_FORCE_PALLAS", "") == "1")
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "k_group", "v_group", "tb"))
+def decode_attention_planes(q, k_packed, k_scale, k_zero,
+                            v_packed, v_scale, v_zero, cur_len, *,
+                            bits: int, k_group: int, v_group: int,
+                            tb: int = _k.DEFAULT_TB):
+    """Plane-major fused decode attention.
+
+    q: (P, Gq, hd); packed K/V per plane as in kernel.py; cur_len (P, 1) i32.
+    Returns (P, Gq, hd) f32.
+    """
+    if _use_pallas():
+        return _k.fused_decode_attention(
+            q, k_packed, k_scale, k_zero, v_packed, v_scale, v_zero, cur_len,
+            bits=bits, k_group=k_group, v_group=v_group, tb=tb,
+            interpret=jax.default_backend() != "tpu")
+
+    # jnp fallback (vmapped oracle, dequantizing per plane)
+    def one(qp, kp, ks, kz, vp, vs, vz, cl):
+        t = vp.shape[0]
+        k = _dequant_rows(kp, ks, kz, bits, k_group, t)
+        v = _dequant_cols(vp, vs, vz, bits, v_group)
+        return _r.decode_attention_dense_ref(qp, k, v, cl[0])
+
+    return jax.vmap(one)(q, k_packed, k_scale, k_zero,
+                         v_packed, v_scale, v_zero, cur_len)
+
+
+def _dequant_rows(packed, scale, zero, bits, group, t):
+    cpb = 8 // bits
+    p = packed.astype(jnp.uint32)
+    mask = jnp.uint32(2 ** bits - 1)
+    rows = [(p >> jnp.uint32(j * bits)) & mask for j in range(cpb)]
+    q = jnp.stack(rows, axis=1).reshape(t, packed.shape[1]).astype(jnp.float32)
+    s = jnp.repeat(scale, group, axis=0, total_repeat_length=t)
+    z = jnp.repeat(zero, group, axis=0, total_repeat_length=t)
+    return q * s + z
+
+
+def _dequant_cols(packed, scale, zero, bits, group):
+    cpb = 8 // bits
+    p = packed.astype(jnp.uint32)
+    mask = jnp.uint32(2 ** bits - 1)
+    cols = [(p >> jnp.uint32(j * bits)) & mask for j in range(cpb)]
+    q = jnp.stack(cols, axis=2).reshape(p.shape[0], p.shape[1] * cpb)
+    hd = q.shape[1]
+    s = jnp.repeat(scale, group, axis=1, total_repeat_length=hd)
+    z = jnp.repeat(zero, group, axis=1, total_repeat_length=hd)
+    return q.astype(jnp.float32) * s + z

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: flash-decode attention over KIVI-quantized KV.
+
+One (batch, kv_head) plane: q (Gq, hd) attends over T cached tokens whose
+K/V are stored packed (K per-channel along tokens, V per-token along
+channels). The oracle dequantizes fully and runs exact softmax attention,
+masked to positions < cur_len.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kivi.ref import Quantized, dequantize_ref
+
+
+def decode_attention_dense_ref(q, k, v, cur_len) -> jax.Array:
+    """q: (Gq, hd); k/v: (T, hd); cur_len: scalar. f32 math."""
+    t = k.shape[0]
+    scores = (q.astype(jnp.float32) @ k.astype(jnp.float32).T
+              ) * (q.shape[-1] ** -0.5)
+    mask = jnp.arange(t) < cur_len
+    scores = jnp.where(mask[None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return p @ v.astype(jnp.float32)
+
+
+def decode_attention_quantized_ref(q, kq: Quantized, vq: Quantized,
+                                   cur_len) -> jax.Array:
+    k = dequantize_ref(kq)      # (T, hd)
+    v = dequantize_ref(vq)
+    return decode_attention_dense_ref(q, k, v, cur_len)

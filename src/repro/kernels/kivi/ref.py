@@ -1,0 +1,105 @@
+"""Pure-jnp oracle for KIVI asymmetric group-wise quantization.
+
+KIVI (arXiv:2402.02750): Key cache quantized PER-CHANNEL (each channel's
+values are grouped along the token axis), Value cache PER-TOKEN (each
+token's values grouped along the channel axis). Asymmetric uint quant:
+
+    q = clip(round((x - zero) / scale), 0, 2^bits - 1)
+    x ≈ q * scale + zero,   zero = min(group), scale = (max-min)/(2^bits-1)
+
+Packing: sub-byte codes are packed along the GROUPED axis into uint8
+(4 codes/byte at 2-bit, 2 at 4-bit, 1 at 8-bit), so a group's codes stay
+contiguous in the packed buffer.
+
+Shapes (token-major): x is (T, F); K uses axis=0 (tokens), V uses axis=1.
+T (resp. F) must be divisible by group_size; callers pad.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Quantized:
+    packed: jax.Array   # uint8, grouped axis shrunk by (8 // bits)
+    scale: jax.Array    # f32, grouped axis shrunk by group_size
+    zero: jax.Array     # f32, same shape as scale
+    bits: int = dataclasses.field(metadata=dict(static=True), default=8)
+    group_size: int = dataclasses.field(metadata=dict(static=True), default=64)
+    # grouped axis: 0=token/K-style, 1=channel/V-style
+    axis: int = dataclasses.field(metadata=dict(static=True), default=0)
+    orig_dim: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+
+def _codes_per_byte(bits: int) -> int:
+    assert bits in (2, 4, 8), bits
+    return 8 // bits
+
+
+def quantize_ref(x: jax.Array, bits: int, group_size: int, axis: int) -> Quantized:
+    assert x.ndim == 2, x.shape
+    t = x.shape[axis]
+    assert t % group_size == 0, (x.shape, group_size, axis)
+    cpb = _codes_per_byte(bits)
+    assert group_size % cpb == 0
+
+    xf = x.astype(jnp.float32)
+    if axis == 1:
+        xf = xf.T                       # normalize: grouped axis first
+    g = xf.shape[0] // group_size
+    f = xf.shape[1]
+    xg = xf.reshape(g, group_size, f)
+    zero = xg.min(axis=1)                                   # (g, f)
+    scale = (xg.max(axis=1) - zero) / (2 ** bits - 1)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round((xg - zero[:, None]) / safe[:, None]),
+                 0, 2 ** bits - 1).astype(jnp.uint8)        # (g, gs, f)
+
+    q = q.reshape(g * group_size // cpb, cpb, f)
+    shifts = (jnp.arange(cpb, dtype=jnp.uint8) * bits)[None, :, None]
+    packed = jnp.sum(
+        (q.astype(jnp.uint32) << shifts.astype(jnp.uint32)), axis=1
+    ).astype(jnp.uint8)                                     # (t/cpb, f)
+
+    if axis == 1:
+        packed, scale, zero = packed.T, scale.T, zero.T
+    return Quantized(packed, scale, zero.astype(jnp.float32), bits,
+                     group_size, axis, t)
+
+
+def dequantize_ref(qt: Quantized, dtype=jnp.float32) -> jax.Array:
+    cpb = _codes_per_byte(qt.bits)
+    packed, scale, zero = qt.packed, qt.scale, qt.zero
+    if qt.axis == 1:
+        packed, scale, zero = packed.T, scale.T, zero.T
+
+    tp, f = packed.shape
+    shifts = (jnp.arange(cpb, dtype=jnp.uint32) * qt.bits)[None, :, None]
+    mask = jnp.uint32(2 ** qt.bits - 1)
+    q = ((packed.astype(jnp.uint32)[:, None, :] >> shifts) & mask)   # (tp,cpb,f)
+    q = q.reshape(tp * cpb, f).astype(jnp.float32)
+
+    g = qt.orig_dim // qt.group_size
+    qg = q.reshape(g, qt.group_size, f)
+    x = qg * scale[:, None] + zero[:, None]
+    x = x.reshape(qt.orig_dim, f)
+    if qt.axis == 1:
+        x = x.T
+    return x.astype(dtype)
+
+
+def quantize_kv_ref(k: jax.Array, v: jax.Array, bits: int,
+                    group_size: int = 64) -> Tuple[Quantized, Quantized]:
+    """k, v: (T, F) — K per-channel (grouped over tokens), V per-token."""
+    return (quantize_ref(k, bits, group_size, axis=0),
+            quantize_ref(v, bits, min(group_size, v.shape[1]), axis=1))
+
+
+def compressed_nbytes(qt: Quantized) -> int:
+    return (qt.packed.size * qt.packed.dtype.itemsize
+            + qt.scale.size * 4 + qt.zero.size * 4)

@@ -1,0 +1,23 @@
+"""jit'd wrapper for the chunked selective-scan kernel."""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels.mamba_scan import kernel as _k
+from repro.kernels.mamba_scan import ref as _r
+
+
+def _use_pallas() -> bool:
+    return (jax.default_backend() == "tpu"
+            or os.environ.get("REPRO_FORCE_PALLAS", "") == "1")
+
+
+@functools.partial(jax.jit, static_argnames=("tc", "dtile"))
+def selective_scan(dt, x, bs, cs, a, h0, tc: int = 64, dtile: int = 128):
+    if _use_pallas():
+        return _k.selective_scan(dt, x, bs, cs, a, h0, tc=tc, dtile=dtile,
+                                 interpret=jax.default_backend() != "tpu")
+    return _r.selective_scan_ref(dt, x, bs, cs, a, h0)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle: sequential selective scan (mamba-1 inner recurrence).
+
+Inputs are post-activation selective params:
+    dt (B, S, D)  — softplus'd step sizes
+    x  (B, S, D)  — post-conv, post-silu activations
+    bs (B, S, N)  — input-selection vectors
+    cs (B, S, N)  — output-selection vectors
+    a  (D, N)     — negative decay matrix (= -exp(a_log))
+    h0 (B, D, N)  — initial state
+Returns y (B, S, D) f32 and final state hT (B, D, N).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(dt, x, bs, cs, a, h0) -> Tuple[jax.Array, jax.Array]:
+    dt = dt.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    bs = bs.astype(jnp.float32)
+    cs = cs.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp           # (B,D), (B,D), (B,N), (B,N)
+        da = jnp.exp(dt_t[..., None] * a)   # (B,D,N)
+        h = h * da + dt_t[..., None] * x_t[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    hT, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (dt.swapaxes(0, 1), x.swapaxes(0, 1),
+         bs.swapaxes(0, 1), cs.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), hT

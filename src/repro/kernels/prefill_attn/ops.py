@@ -1,0 +1,34 @@
+"""jit'd wrapper for the prefill flash-attention kernel (GQA model layout)."""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.prefill_attn import kernel as _k
+from repro.kernels.prefill_attn import ref as _r
+
+
+def _use_pallas() -> bool:
+    return (jax.default_backend() == "tpu"
+            or os.environ.get("REPRO_FORCE_PALLAS", "") == "1")
+
+
+@functools.partial(jax.jit, static_argnames=("qb", "kb"))
+def causal_attention(q, k, v, qb: int = 256, kb: int = 256) -> jax.Array:
+    """q: (B, S, H, hd); k/v: (B, S, Kv, hd) GQA. Returns (B, S, H, hd) f32."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    # plane-major: repeat KV per query-head group
+    qp = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kp = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, s, hd)
+    vp = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, s, hd)
+    if _use_pallas():
+        out = _k.flash_attention(qp, kp, vp, qb=qb, kb=kb,
+                                 interpret=jax.default_backend() != "tpu")
+    else:
+        out = jax.vmap(_r.causal_attention_ref)(qp, kp, vp)
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)

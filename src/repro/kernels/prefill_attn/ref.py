@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: causal multi-head attention for prefill (one B*H plane)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_attention_ref(q, k, v) -> jax.Array:
+    """q/k/v: (S, hd) one (batch, head) plane; causal; f32 math."""
+    s, hd = q.shape
+    scores = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * (hd ** -0.5)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return p @ v.astype(jnp.float32)

@@ -1,0 +1,92 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Collective-breakdown diagnosis for one dry-run cell (perf-loop tooling):
+prints the top collective ops by trip-weighted bytes with their HLO
+op_name provenance, so each hillclimb hypothesis targets a named op.
+
+    PYTHONPATH=src python -m repro.launch.diagnose --arch X --shape Y [-n 12]
+"""
+import argparse
+import re
+import sys
+
+import jax
+
+from repro.launch import hlo_cost as hc
+from repro.launch.dryrun import build_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def collective_breakdown(txt: str, top: int = 12):
+    comps = hc.parse_computations(txt)
+    entry = None
+    for line in txt.splitlines():
+        if line.startswith("ENTRY"):
+            entry = hc._COMP_HDR_RE.match(line.strip()).group(1)
+    mult = {entry: 1.0}
+    frontier, visited = [entry], set()
+    while frontier:
+        c = frontier.pop()
+        if c in visited or c not in comps:
+            continue
+        visited.add(c)
+        comp = comps[c]
+        m_self = mult.get(c, 1.0)
+        for op in comp.ops:
+            for ref in hc._CALL_REFS.finditer(op.line):
+                kind, first, rest = ref.group(1), ref.group(2), ref.group(3)
+                for tgt in [first] + re.findall(r"%([\w.\-]+)", rest or ""):
+                    if tgt not in comps:
+                        continue
+                    factor = m_self
+                    if kind in ("body", "condition") and op.opcode == "while":
+                        cm = re.search(r"condition=%?([\w.\-]+)", op.line)
+                        trips = (hc._trip_count(comps[cm.group(1)])
+                                 if cm and cm.group(1) in comps else 1)
+                        factor = m_self * max(trips, 1)
+                    mult[tgt] = mult.get(tgt, 0.0) + factor
+                    if tgt not in visited:
+                        frontier.append(tgt)
+    rows = []
+    for cname, comp in comps.items():
+        for op in comp.ops:
+            base = op.opcode.replace("-start", "")
+            if base in hc.COLLECTIVE_FACTOR and not op.opcode.endswith("-done"):
+                b = (hc.shape_bytes(op.result_type)
+                     * hc.COLLECTIVE_FACTOR[base] * mult.get(cname, 0))
+                meta = re.search(r'op_name="([^"]*)"', op.line)
+                rows.append((b, base, op.result_type[:64],
+                             mult.get(cname, 0),
+                             (meta.group(1) if meta else "")[:110]))
+    rows.sort(reverse=True)
+    return rows[:top], sum(r[0] for r in rows)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("-n", type=int, default=12)
+    args = ap.parse_args()
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    step, in_specs, in_sh, out_sh, aux = build_cell(args.arch, args.shape,
+                                                    mesh)
+    donate = (0,) if args.shape.startswith("train") else (
+        (1,) if "decode" in args.shape or "long" in args.shape or
+        args.shape.startswith("long") else ())
+    with mesh:
+        compiled = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=donate).lower(*in_specs).compile()
+    rows, total = collective_breakdown(compiled.as_text(), args.n)
+    print(f"total collective bytes/chip: {total:.3e} "
+          f"(~{total/50e9*1e3:.1f} ms at 50 GB/s)")
+    for b, kind, t, m, name in rows:
+        print(f"  {b:.3e} {kind:18s} x{m:5.0f} {t:64s} {name}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,230 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# This is the ONLY entry point that forces 512 host devices (dry-run only).
+# (No `from __future__` here: the os.environ lines above must stay first.)
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers,
+partitions, and compiles on the production mesh, and extract its roofline
+terms (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Per cell:
+    with mesh:
+        lowered = jax.jit(step_fn, in_shardings=..., out_shardings=...)\
+            .lower(*input_specs(arch, shape))
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())     # proves it fits
+        print(compiled.cost_analysis())       # flops/bytes for §Roofline
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k [--multi-pod] [--json out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import functools
+import json
+import sys
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED, get_config, get_shape, shape_applicable, SHAPES
+from repro.launch import roofline as rl
+from repro.launch import sharding as shlib
+from repro.launch import specs as sp
+from repro.launch.mesh import HBM_BYTES, make_production_mesh
+from repro.models import build_model
+from repro.models import transformer
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import init_train_state_shapes, make_train_step
+
+# archs whose optimizer state must be int8 to fit a single pod (DESIGN.md §5)
+INT8_OPT_ARCHS = {"jamba-1.5-large-398b"}
+
+
+def _opt_cfg(arch: str) -> AdamWConfig:
+    return AdamWConfig(lr=1e-4, int8_state=arch in INT8_OPT_ARCHS)
+
+
+def build_cell(arch: str, shape_name: str, mesh, kv_bits: int = 16):
+    """Returns (step_fn, in_specs, in_shardings, out_shardings, aux_info)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    model = build_model(cfg)
+    n_params = model.param_count()
+    n_active = model.active_param_count()
+    logical = shlib.default_logical_map(mesh)
+
+    if shape.kind == "train":
+        opt_cfg = _opt_cfg(arch)
+        state_shapes = init_train_state_shapes(model, opt_cfg)
+        state_sh = sp.train_state_shardings(state_shapes, mesh)
+        batch_specs, batch_sh = sp.train_batch_specs(cfg, shape, mesh)
+        raw_step = make_train_step(model, opt_cfg, accum_steps=1, remat=True)
+
+        def step(state, batch):
+            with shlib.use_mesh(mesh, logical):
+                return raw_step(state, batch)
+
+        in_specs = (state_shapes, batch_specs)
+        in_sh = (state_sh, batch_sh)
+        out_sh = (state_sh, None)
+        return step, in_specs, in_sh, out_sh, (cfg, model, shape, n_params,
+                                               n_active)
+
+    params_shapes = model.init_shapes()
+    params_sh = sp.param_shardings(params_shapes, mesh, mode="serve")
+
+    if shape.kind == "prefill":
+        batch_specs, batch_sh = sp.prefill_batch_specs(cfg, shape, mesh)
+        batch_specs.pop("labels")
+        batch_sh.pop("labels")
+
+        def step(params, batch):
+            with shlib.use_mesh(mesh, logical):
+                # bounded expert buffers at 32k scale (DESIGN.md §8)
+                logits, cache = transformer.prefill(
+                    params, cfg, batch, capacity=shape.seq_len,
+                    remat=True, moe_dropless=False)
+                return logits, cache
+
+        in_specs = (params_shapes, batch_specs)
+        in_sh = (params_sh, batch_sh)
+        out_sh = None
+        return step, in_specs, in_sh, out_sh, (cfg, model, shape, n_params,
+                                               n_active)
+
+    # decode
+    from repro.configs.base import AttnKind
+    if cfg.attn_kind != AttnKind.GQA:
+        kv_bits = 16            # quantized serve_step is the GQA data plane
+    (cache_shapes, idx_spec, tok_spec), (cache_sh, idx_sh, tok_sh) = \
+        sp.decode_specs(cfg, model, shape, mesh, kv_bits=kv_bits)
+    long_ctx = shape.name == "long_500k"
+    logical_decode = dict(logical)
+    logical_decode["seq_kv"] = ("data", "model") if long_ctx else "model"
+
+    def step(params, cache, idx, toks):
+        with shlib.use_mesh(mesh, logical_decode):
+            return transformer.decode_step(params, cfg, cache, idx, toks)
+
+    in_specs = (params_shapes, cache_shapes, idx_spec, tok_spec)
+    in_sh = (params_sh, cache_sh, idx_sh, tok_sh)
+    out_sh = (None, cache_sh)
+    return step, in_specs, in_sh, out_sh, (cfg, model, shape, n_params,
+                                           n_active)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, kv_bits: int = 16) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, why = shape_applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": why}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    try:
+        step, in_specs, in_sh, out_sh, aux = build_cell(arch, shape_name,
+                                                        mesh, kv_bits)
+        cfg, model, shape, n_params, n_active = aux
+        # donate the mutable aggregate (train state / decode cache) so the
+        # updated output aliases the input buffer — in/out do not double.
+        donate = (0,) if shape.kind == "train" else (
+            (1,) if shape.kind == "decode" else ())
+        with mesh:
+            jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*in_specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        eff_bits = kv_bits if shape.kind == "decode" else 16
+        roof = rl.analyze(arch, shape, mesh_name, n_chips, compiled, cfg,
+                          n_params, n_active, kv_bits=eff_bits,
+                          opt_bytes_per_param=(2.25 if arch in
+                                               INT8_OPT_ARCHS else 8.0))
+        args_bytes = float(getattr(mem, "argument_size_in_bytes", 0))
+        peak = rl.analytic_peak_bytes(cfg, shape, n_params, n_chips,
+                                      args_bytes)
+        result = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "ok", "n_chips": n_chips,
+            "n_params": n_params, "n_active_params": n_active,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory_analysis": str(mem),
+            "args_bytes_per_chip": args_bytes,
+            "analytic_peak_bytes": peak,
+            "xla_temp_bytes": roof.peak_memory_bytes,
+            "fits_hbm": bool(peak <= HBM_BYTES),
+            **roof.to_dict(),
+        }
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_name}] OK "
+                  f"lower={t_lower:.0f}s compile={t_compile:.0f}s")
+            print(f"  memory_analysis: {mem}")
+            print(f"  cost: flops/chip={roof.flops:.3e} "
+                  f"hbm/chip={roof.hbm_bytes:.3e} "
+                  f"coll/chip={roof.collective_bytes:.3e}")
+            print(f"  roofline: compute={roof.t_compute*1e3:.2f}ms "
+                  f"memory={roof.t_memory*1e3:.2f}ms "
+                  f"collective={roof.t_collective*1e3:.2f}ms "
+                  f"-> bottleneck={roof.bottleneck} "
+                  f"useful_ratio={roof.useful_flops_ratio:.2f}")
+        return result
+    except Exception as e:
+        if verbose:
+            traceback.print_exc()
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "error", "error": f"{type(e).__name__}: {e}"}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--kv-bits", type=int, default=16, choices=(2, 4, 8, 16),
+                    help="decode cells: packed quantized-KV serve step")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED:
+            for shape in SHAPES:
+                cells.append((arch, shape.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    results = [run_cell(a, s, args.multi_pod, kv_bits=args.kv_bits)
+               for a, s in cells]
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    bad = [r for r in results if r["status"] == "error"]
+    print(f"\n{len(results)} cells: "
+          f"{sum(r['status'] == 'ok' for r in results)} ok, "
+          f"{sum(r['status'] == 'skipped' for r in results)} skipped, "
+          f"{len(bad)} errors")
+    for r in bad:
+        print(f"  ERROR {r['arch']} x {r['shape']}: {r['error'][:200]}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

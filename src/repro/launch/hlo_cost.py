@@ -1,0 +1,288 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` body's FLOPs/bytes/collectives are not multiplied by the trip
+count (verified empirically on the CPU backend), which under-counts scanned
+models by the layer count. Since the whole framework scans over layer
+groups (DESIGN.md §8.2), we walk the optimized HLO ourselves:
+
+  * computations are parsed into (name -> ops, local symbol table);
+  * ``while`` ops multiply their body/condition by the trip count, read
+    from the largest integer constant in the condition computation (our
+    scan conditions compare the induction variable against that constant);
+  * ``fusion`` calls propagate multipliers into fused computations for
+    FLOP counting; fusion-internal ops do NOT count toward memory traffic
+    (a fused kernel touches only its parameters/outputs);
+  * dot FLOPs = 2 * |result| * contracted extent; elementwise FLOPs are
+    ignored (dot-dominated workloads; noted in EXPERIMENTS.md);
+  * memory bytes per top-level op = result + operand bytes (the standard
+    fusion-boundary approximation);
+  * collective bytes are weighted by ring-transfer factors (all-reduce 2x).
+
+Cross-checked against cost_analysis() on unscanned modules (test suite).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_FACTOR = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_START_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _parse_def(line: str):
+    """'%name = TYPE opcode(...)' with balanced-paren TYPE (nested tuples)."""
+    m = _DEF_START_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        end = len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i + 1
+                    break
+        rtype, rest2 = rest[:end], rest[end:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype, rest2 = rest[:sp], rest[sp:]
+    m2 = _OPCODE_RE.match(rest2)
+    if not m2:
+        return None
+    opcode = m2.group(1)
+    # balanced scan of the argument list following "opcode("
+    args_start = m2.end()
+    depth, end = 1, len(rest2)
+    for i in range(args_start, len(rest2)):
+        ch = rest2[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return name, rtype, opcode, rest2[args_start:end]
+# greedy param capture: tuple-typed params contain nested ")" before " ->"
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALL_REFS = re.compile(
+    r"(condition|body|calls|to_apply|branch_computations)=\{?%?([\w.\-]+)"
+    r"((?:,\s*%[\w.\-]+)*)\}?")
+
+_ZERO_COST_OPS = {
+    "get-tuple-element", "tuple", "parameter", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "iota", "bitcast-convert",
+}
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class OpLine:
+    name: str
+    result_type: str
+    opcode: str
+    line: str
+    args: str = ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[OpLine]
+    symbols: Dict[str, str]          # op/param name -> result type string
+
+
+def parse_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("//"):
+            continue
+        if cur is None or (not raw.startswith(" ") and "{" in line):
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr and "{" in line:
+                cur = Computation(hdr.group(1), [], {})
+                comps[cur.name] = cur
+                # parameter symbols: "name: type" pairs
+                for pm in re.finditer(r"([\w.\-]+):\s*(\([^)]*\)|[^,)]+)",
+                                      hdr.group(2)):
+                    cur.symbols[pm.group(1)] = pm.group(2)
+                continue
+        if cur is None:
+            continue
+        if line == "}":
+            cur = None
+            continue
+        d = _parse_def(line)
+        if d:
+            op = OpLine(d[0], d[1], d[2], line, d[3])
+            cur.ops.append(op)
+            cur.symbols[op.name] = op.result_type
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for op in cond.ops:
+        m = re.search(r"constant\((\d+)\)", op.line)
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _operands(op: OpLine) -> List[str]:
+    return _OPERAND_RE.findall(op.args)
+
+
+def _dot_flops(op: OpLine, comp: Computation) -> float:
+    res = 1
+    for d in _shape_dims(op.result_type):
+        res *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    if not m:
+        return 2.0 * res
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    opnds = _operands(op)
+    if not opnds:
+        return 2.0 * res
+    lhs_type = comp.symbols.get(opnds[0], "")
+    ldims = _shape_dims(lhs_type)
+    contract = 1
+    for c in cdims:
+        if c < len(ldims):
+            contract *= ldims[c]
+    return 2.0 * res * contract
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_detail: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_FACTOR})
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = parse_computations(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+    if entry is None:       # fall back: last computation
+        entry = list(comps)[-1]
+
+    # multipliers per computation
+    mult: Dict[str, float] = {entry: 1.0}
+    # BFS through call graph; while bodies get trip multipliers.
+    frontier = [entry]
+    visited = set()
+    while frontier:
+        cname = frontier.pop()
+        if cname in visited or cname not in comps:
+            continue
+        visited.add(cname)
+        comp = comps[cname]
+        m_self = mult.get(cname, 1.0)
+        for op in comp.ops:
+            for ref in _CALL_REFS.finditer(op.line):
+                kind, first, rest = ref.group(1), ref.group(2), ref.group(3)
+                targets = [first] + re.findall(r"%([\w.\-]+)", rest or "")
+                for tgt in targets:
+                    if tgt not in comps:
+                        continue
+                    factor = m_self
+                    if kind in ("body", "condition") and op.opcode == "while":
+                        cond_name = None
+                        cm = re.search(r"condition=%?([\w.\-]+)", op.line)
+                        if cm:
+                            cond_name = cm.group(1)
+                        trips = _trip_count(comps[cond_name]) \
+                            if cond_name in comps else 1
+                        factor = m_self * max(trips, 1)
+                    mult[tgt] = mult.get(tgt, 0.0) + factor
+                    if tgt not in visited:
+                        frontier.append(tgt)
+
+    # classify: fusion-called computations contribute flops only
+    fusion_comps = set()
+    control_comps = set([entry])
+    for comp in comps.values():
+        for op in comp.ops:
+            for ref in _CALL_REFS.finditer(op.line):
+                kind, first, rest = ref.group(1), ref.group(2), ref.group(3)
+                targets = [first] + re.findall(r"%([\w.\-]+)", rest or "")
+                for tgt in targets:
+                    if kind == "calls" and op.opcode == "fusion":
+                        fusion_comps.add(tgt)
+                    elif kind in ("body", "condition", "branch_computations"):
+                        control_comps.add(tgt)
+                    elif kind == "calls":
+                        control_comps.add(tgt)
+
+    cost = HloCost()
+    for cname, comp in comps.items():
+        m_self = mult.get(cname, 0.0)
+        if m_self <= 0:
+            continue
+        in_control = cname in control_comps
+        for op in comp.ops:
+            if op.opcode == "dot":
+                cost.flops += m_self * _dot_flops(op, comp)
+            base = op.opcode.replace("-start", "")
+            if base in COLLECTIVE_FACTOR and not op.opcode.endswith("-done"):
+                b = shape_bytes(op.result_type) * COLLECTIVE_FACTOR[base]
+                cost.collective_bytes += m_self * b
+                cost.collective_detail[base] += m_self * b
+            if in_control and op.opcode not in _ZERO_COST_OPS \
+                    and op.opcode != "while":
+                rb = shape_bytes(op.result_type)
+                ob = sum(shape_bytes(comp.symbols.get(o, ""))
+                         for o in _operands(op))
+                cost.mem_bytes += m_self * (rb + ob)
+    return cost

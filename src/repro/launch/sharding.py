@@ -1,0 +1,116 @@
+"""Logical activation/parameter sharding rules.
+
+The model code calls ``constrain(x, logical_spec)`` on key activations. When
+a mesh is active (set by the launcher via ``use_mesh``) this becomes
+``jax.lax.with_sharding_constraint``; on a single device it is a no-op, so
+model code never has to know whether it is distributed.
+
+Logical axis names used by the model code:
+  "data"  — batch / fsdp axis  (multi-pod: ("pod", "data"))
+  "model" — tensor-parallel axis
+  "seq"   — context-parallel axis for long-KV decode (mapped to "data")
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Dict[str, Any]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, logical_to_mesh: Optional[Dict[str, Any]] = None):
+    """Activate a mesh + logical-axis mapping for model-internal constraints.
+
+    logical_to_mesh maps logical names ("data"/"model"/"seq") to mesh axis
+    names or tuples of them, e.g. {"data": ("pod", "data"), "model": "model"}.
+    """
+    if logical_to_mesh is None:
+        logical_to_mesh = default_logical_map(mesh)
+    prev = getattr(_state, "rules", None)
+    _state.rules = {"mesh": mesh, "map": logical_to_mesh}
+    try:
+        with mesh:
+            yield
+    finally:
+        _state.rules = prev
+
+
+def default_logical_map(mesh: Mesh) -> Dict[str, Any]:
+    names = mesh.axis_names
+    if "pod" in names:
+        return {"data": ("pod", "data"), "model": "model", "seq": ("pod", "data")}
+    return {"data": "data", "model": "model", "seq": "data"}
+
+
+_MISSING = object()
+
+
+def resolve_spec(logical: Sequence[Optional[str]]) -> Optional[P]:
+    """None if any logical axis is absent from the active map (skip constraint)."""
+    rules = _rules()
+    if rules is None:
+        return None
+    m = rules["map"]
+    out = []
+    for ax in logical:
+        if ax is None:
+            out.append(None)
+        else:
+            got = m.get(ax, _MISSING)
+            if got is _MISSING:
+                return None
+            out.append(got)
+    return P(*out)
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a sharding constraint if a mesh is active (else identity)."""
+    rules = _rules()
+    if rules is None:
+        return x
+    spec = resolve_spec(logical)
+    if spec is None:
+        return x
+    # Drop axes whose mesh size doesn't divide the dim (e.g. kv_heads <
+    # |model|), and duplicate mesh-axis uses (first occurrence wins — a
+    # mesh axis may shard at most one dim).
+    mesh = rules["mesh"]
+    fixed, used = [], set()
+    for dim, ax in zip(x.shape, spec):
+        size = _axis_size(mesh, ax)
+        names = (tuple(ax) if isinstance(ax, (tuple, list))
+                 else (ax,)) if ax is not None else ()
+        ok = (ax is not None and dim % size == 0 and dim >= size
+              and not any(n in used for n in names))
+        fixed.append(ax if ok else None)
+        if ok:
+            used.update(names)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def named_sharding(mesh: Mesh, *logical: Optional[str],
+                   logical_to_mesh: Optional[Dict[str, Any]] = None) -> NamedSharding:
+    """Build a NamedSharding from logical axis names (launcher-side helper)."""
+    m = logical_to_mesh or default_logical_map(mesh)
+    return NamedSharding(mesh, P(*[m.get(ax) if ax else None for ax in logical]))

@@ -1,0 +1,405 @@
+"""Attention: GQA (with qk-norm, partial rope) and MLA (DeepSeek latent).
+
+Two entry modes, dispatched on static shape:
+  * full  — S tokens, causal mask, optionally emits a KV cache;
+  * decode — S == 1 new token, reads + functionally updates a fixed-capacity
+    cache at ``cur_index`` (the standard fixed-shape serving step).
+
+Cache layout (GQA):   {"k": (B, C, n_kv, hd), "v": (B, C, n_kv, hd)}
+Cache layout (MLA):   {"ckv": (B, C, r), "krope": (B, C, rope_dim)}
+  — the MLA cache stores the *compressed latent*, which is exactly the
+  artifact AdaptCache compresses further (DESIGN.md §6).
+
+MLA decode uses the absorbed form (q folded through W_uk, outputs folded
+through W_uv) so per-step cost is O(S·r) per head, not O(S·r·n_heads·nope).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnKind, ModelConfig
+from repro.launch.sharding import constrain
+from repro.models.layers import (
+    Params, apply_rope, dense_init, init_rmsnorm, rmsnorm,
+)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(rng, cfg: ModelConfig, dtype, cross: bool = False) -> Params:
+    if cfg.attn_kind == AttnKind.MLA and not cross:
+        return _init_mla(rng, cfg, dtype)
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(rng, 6)
+    p: Params = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+def _init_mla(rng, cfg: ModelConfig, dtype) -> Params:
+    m = cfg.mla
+    ks = jax.random.split(rng, 6)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * qk_dim, dtype),
+        "w_dkv": dense_init(ks[1], cfg.d_model, m.kv_lora_rank, dtype),
+        "w_kr": dense_init(ks[2], cfg.d_model, m.qk_rope_head_dim, dtype),
+        "w_uk": dense_init(ks[3], m.kv_lora_rank,
+                           cfg.n_heads * m.qk_nope_head_dim, dtype),
+        "w_uv": dense_init(ks[4], m.kv_lora_rank,
+                           cfg.n_heads * m.v_head_dim, dtype),
+        "wo": dense_init(ks[5], cfg.n_heads * m.v_head_dim, cfg.d_model, dtype),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank, dtype),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype) -> Params:
+    if cfg.attn_kind == AttnKind.MLA:
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((batch, capacity, m.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, capacity, m.qk_rope_head_dim), dtype),
+        }
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, capacity, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, capacity, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# core GQA math
+# ---------------------------------------------------------------------------
+
+def _gqa_scores_out(q, k, v, mask):
+    """q: (B,S,H,hd), k/v: (B,T,Kv,hd); mask: broadcastable to (B,1,1,S,T)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    q = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5) + mask
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v)
+    return out.reshape(b, s, h, hd)
+
+
+def _causal_mask(s: int, t: int, offset: int = 0) -> jax.Array:
+    """(1,1,1,s,t) additive mask; query i attends keys j <= i + offset."""
+    qi = jnp.arange(s)[:, None] + offset
+    kj = jnp.arange(t)[None, :]
+    return jnp.where(kj <= qi, 0.0, NEG_INF)[None, None, None]
+
+
+# Above this sequence length the full path switches to query-chunked
+# (flash-style) attention: S*S score matrices never materialize, matching
+# the memory behaviour of the Pallas prefill kernel on TPU.
+FLASH_THRESHOLD = 2048
+FLASH_CHUNK = 512
+
+
+def _chunked_gqa(q, k, v, causal: bool, chunk: int = FLASH_CHUNK):
+    """Memory-efficient causal attention: scan over query chunks.
+
+    q: (B,S,H,hd), k/v: (B,S,Kv,hd). Peak score memory = B*H*chunk*S."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    chunk = min(chunk, s)
+    n = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    qr = q.reshape(b, n, chunk, kv, g, hd).swapaxes(0, 1)   # (n,B,c,kv,g,hd)
+    offs = jnp.arange(n) * chunk
+
+    def body(_, inp):
+        qb, off = inp
+        scores = jnp.einsum("bckgh,btkh->bkgct", qb, k).astype(jnp.float32)
+        scores = scores * (hd ** -0.5)
+        if causal:
+            qi = off + jnp.arange(chunk)[:, None]
+            kj = jnp.arange(s)[None, :]
+            scores = scores + jnp.where(kj <= qi, 0.0, NEG_INF)[None, None, None]
+        p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        ob = jnp.einsum("bkgct,btkh->bckgh", p, v)
+        return None, ob
+
+    _, outs = jax.lax.scan(body, None, (qr, offs))          # (n,B,c,kv,g,hd)
+    return outs.swapaxes(0, 1).reshape(b, s, h, hd)
+
+
+def _decode_mask(cur_index, capacity: int) -> jax.Array:
+    """keys at slots <= cur_index are visible.
+
+    cur_index: scalar -> (1,1,1,1,C) mask; vector (B,) -> (B,1,1,1,C)."""
+    kj = jnp.arange(capacity)
+    if jnp.ndim(cur_index) == 0:
+        return jnp.where(kj <= cur_index, 0.0, NEG_INF)[None, None, None, None, :]
+    vis = kj[None, :] <= cur_index[:, None]                   # (B, C)
+    return jnp.where(vis, 0.0, NEG_INF)[:, None, None, None, :]
+
+
+def _write_cache(buf: jax.Array, new: jax.Array, cur_index) -> jax.Array:
+    """Write one new row per batch lane at slot cur_index.
+
+    buf: (B, C, ...); new: (B, 1, ...); cur_index scalar or (B,) int."""
+    if jnp.ndim(cur_index) == 0:
+        start = (0, cur_index.astype(jnp.int32)) + (0,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), start)
+    b = buf.shape[0]
+    return buf.at[jnp.arange(b), cur_index.astype(jnp.int32)].set(
+        new[:, 0].astype(buf.dtype))
+
+
+# ---------------------------------------------------------------------------
+# GQA forward
+# ---------------------------------------------------------------------------
+
+def attention_fwd(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,                       # (B, S, d)
+    positions: jax.Array,               # (B, S) int32
+    cache: Optional[Params] = None,
+    cur_index: Optional[jax.Array] = None,   # scalar; decode mode when S==1 & cache
+    causal: bool = True,
+    kv_source: Optional[jax.Array] = None,   # cross-attention memory (B, T, d)
+) -> Tuple[jax.Array, Optional[Params]]:
+    if cfg.attn_kind == AttnKind.MLA and kv_source is None:
+        return mla_fwd(p, cfg, x, positions, cache, cur_index)
+
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+
+    if kv_source is not None:
+        # Cross-attention. Cache, when provided, holds precomputed enc K/V.
+        if cache is not None:
+            k, v = cache["k"], cache["v"]
+        else:
+            t = kv_source.shape[1]
+            k = (kv_source @ p["wk"]).reshape(b, t, cfg.n_kv_heads, hd)
+            v = (kv_source @ p["wv"]).reshape(b, t, cfg.n_kv_heads, hd)
+        if cfg.qk_norm:
+            q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        out = _gqa_scores_out(q, k, v, jnp.zeros(()))
+        new_cache = {"k": k, "v": v}
+        return out.reshape(b, s, -1) @ p["wo"], new_cache
+
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rotary_pct)
+    q = constrain(q, ("data", None, "model", None))
+    k = constrain(k, ("data", None, "model", None))
+
+    decode = cache is not None and cur_index is not None and s == 1
+    if decode:
+        cap = cache["k"].shape[1]
+        ck = _write_cache(cache["k"], k, cur_index)
+        cv = _write_cache(cache["v"], v, cur_index)
+        ck = constrain(ck, ("data", "seq_kv", "model", None))
+        cv = constrain(cv, ("data", "seq_kv", "model", None))
+        out = _gqa_scores_out(q, ck, cv, _decode_mask(cur_index, cap))
+        return out.reshape(b, 1, -1) @ p["wo"], {"k": ck, "v": cv}
+
+    if s >= FLASH_THRESHOLD:
+        out = _chunked_gqa(q, k, v, causal)
+    else:
+        mask = _causal_mask(s, s) if causal else jnp.zeros(())
+        out = _gqa_scores_out(q, k, v, mask)
+    new_cache = {"k": k, "v": v}  # prefill artifact
+    return out.reshape(b, s, -1) @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# quantized-KV decode (the AdaptCache data plane inside serve_step)
+# ---------------------------------------------------------------------------
+#
+# Cache layout (bits b, cpb = 8//b codes packed along head_dim):
+#   k_packed (B, C, Kv, hd/cpb) uint8     k_scale/k_zero (B, C, Kv, 1) f32
+#   v_packed (B, C, Kv, hd/cpb) uint8     v_scale/v_zero (B, C, Kv, 1) f32
+# New tokens are quantized on write (per-token/head asymmetric over hd) —
+# the serving-tier KIVI codec stays per-channel for K at rest; this is the
+# resident-HBM form the fused Pallas kernel (kernels/decode_attn) consumes.
+# On non-TPU backends the jnp dequant below is the same math inlined.
+
+def init_quantized_cache(cfg: ModelConfig, batch: int, capacity: int,
+                         bits: int = 4) -> Params:
+    hd = cfg.resolved_head_dim
+    cpb = 8 // bits
+    shape_p = (batch, capacity, cfg.n_kv_heads, hd // cpb)
+    shape_s = (batch, capacity, cfg.n_kv_heads, 1)
+    z = jnp.zeros
+    return {"k_packed": z(shape_p, jnp.uint8), "v_packed": z(shape_p, jnp.uint8),
+            "k_scale": z(shape_s, jnp.float32), "k_zero": z(shape_s, jnp.float32),
+            "v_scale": z(shape_s, jnp.float32), "v_zero": z(shape_s, jnp.float32)}
+
+
+def _quant_token(x: jax.Array, bits: int):
+    """x: (B, 1, Kv, hd) -> packed (B,1,Kv,hd/cpb) u8, scale, zero (B,1,Kv,1)."""
+    cpb = 8 // bits
+    xf = x.astype(jnp.float32)
+    zero = xf.min(axis=-1, keepdims=True)
+    scale = (xf.max(axis=-1, keepdims=True) - zero) / (2 ** bits - 1)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round((xf - zero) / safe), 0, 2 ** bits - 1)
+    q = q.astype(jnp.uint32).reshape(*x.shape[:-1], x.shape[-1] // cpb, cpb)
+    shifts = (jnp.arange(cpb, dtype=jnp.uint32) * bits)
+    packed = (q << shifts).sum(axis=-1).astype(jnp.uint8)
+    return packed, scale, zero
+
+
+def _dequant_cache(packed, scale, zero, bits: int, dtype):
+    cpb = 8 // bits
+    p = packed.astype(jnp.uint32)[..., None]
+    shifts = (jnp.arange(cpb, dtype=jnp.uint32) * bits)
+    mask = jnp.uint32(2 ** bits - 1)
+    codes = ((p >> shifts) & mask).astype(jnp.float32)
+    codes = codes.reshape(*packed.shape[:-1], packed.shape[-1] * cpb)
+    return (codes * scale + zero).astype(dtype)
+
+
+def attention_fwd_quantized(p: Params, cfg: ModelConfig, x: jax.Array,
+                            positions: jax.Array, cache: Params,
+                            cur_index: jax.Array
+                            ) -> Tuple[jax.Array, Params]:
+    """One-token GQA decode over a packed-uint8 KV cache."""
+    b, s, _ = x.shape
+    assert s == 1
+    hd = cfg.resolved_head_dim
+    bits = 8 // (hd // cache["k_packed"].shape[-1])   # infer from packing
+    q = (x @ p["wq"]).reshape(b, 1, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rotary_pct)
+
+    kp, ks, kz = _quant_token(k, bits)
+    vp, vs, vz = _quant_token(v, bits)
+    new_cache = dict(cache)
+    for name, val in (("k_packed", kp), ("k_scale", ks), ("k_zero", kz),
+                      ("v_packed", vp), ("v_scale", vs), ("v_zero", vz)):
+        new_cache[name] = _write_cache(cache[name], val, cur_index)
+
+    # keep the ENTIRE unpack chain sequence-sharded: without the trailing
+    # constraints XLA re-shards the u32 unpack intermediates to the
+    # einsum-preferred kv-head sharding, moving 8x the packed bytes
+    # (§Perf iteration C3 debug log).
+    spec = ("data", "seq_kv", "model", None)
+    kd = _dequant_cache(constrain(new_cache["k_packed"], spec),
+                        constrain(new_cache["k_scale"], spec),
+                        constrain(new_cache["k_zero"], spec), bits, x.dtype)
+    vd = _dequant_cache(constrain(new_cache["v_packed"], spec),
+                        constrain(new_cache["v_scale"], spec),
+                        constrain(new_cache["v_zero"], spec), bits, x.dtype)
+    kd = constrain(kd, spec)
+    vd = constrain(vd, spec)
+    cap = kd.shape[1]
+    out = _gqa_scores_out(q, kd, vd, _decode_mask(cur_index, cap))
+    return out.reshape(b, 1, -1) @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA forward
+# ---------------------------------------------------------------------------
+
+def mla_fwd(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Optional[Params] = None,
+    cur_index: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope_d, vd, r = (m.qk_nope_head_dim, m.qk_rope_head_dim,
+                           m.v_head_dim, m.kv_lora_rank)
+    scale = (nope + rope_d) ** -0.5
+
+    q = (x @ p["wq"]).reshape(b, s, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_new = rmsnorm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)      # (B,S,r)
+    kr_new = apply_rope((x @ p["w_kr"])[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]                     # (B,S,rope_d)
+
+    w_uk = p["w_uk"].reshape(r, h, nope)
+    w_uv = p["w_uv"].reshape(r, h, vd)
+
+    decode = cache is not None and cur_index is not None and s == 1
+    if decode:
+        cap = cache["ckv"].shape[1]
+        ckv = _write_cache(cache["ckv"], ckv_new, cur_index)
+        krope = _write_cache(cache["krope"], kr_new, cur_index)
+        # absorbed form: fold W_uk into q, W_uv out of the weighted latent sum
+        q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)              # (B,1,H,r)
+        sc = (jnp.einsum("bshr,btr->bhst", q_abs, ckv)
+              + jnp.einsum("bshd,btd->bhst", q_rope, krope))
+        sc = sc.astype(jnp.float32) * scale + _decode_mask(cur_index, cap)[:, :, 0]
+        pr = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+        lat = jnp.einsum("bhst,btr->bshr", pr, ckv)                     # (B,1,H,r)
+        out = jnp.einsum("bshr,rhv->bshv", lat, w_uv)
+        return out.reshape(b, 1, -1) @ p["wo"], {"ckv": ckv, "krope": krope}
+
+    # full (train / prefill): decompressed form
+    k_nope = jnp.einsum("bsr,rhn->bshn", ckv_new, w_uk)
+    v = jnp.einsum("bsr,rhv->bshv", ckv_new, w_uv)
+    if s >= FLASH_THRESHOLD:
+        out = _chunked_mla(q_nope, q_rope, k_nope, kr_new, v, scale)
+    else:
+        sc = (jnp.einsum("bshn,bthn->bhst", q_nope, k_nope)
+              + jnp.einsum("bshd,btd->bhst", q_rope, kr_new))
+        sc = sc.astype(jnp.float32) * scale + _causal_mask(s, s)[:, :, 0]
+        pr = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhst,bthv->bshv", pr, v)
+    new_cache = {"ckv": ckv_new, "krope": kr_new}
+    return out.reshape(b, s, -1) @ p["wo"], new_cache
+
+
+def _chunked_mla(q_nope, q_rope, k_nope, k_rope, v, scale,
+                 chunk: int = FLASH_CHUNK):
+    """Query-chunked MLA attention (causal). q_nope: (B,S,H,n)."""
+    b, s, h, _ = q_nope.shape
+    chunk = min(chunk, s)
+    n = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    qn = q_nope.reshape(b, n, chunk, h, -1).swapaxes(0, 1)
+    qr = q_rope.reshape(b, n, chunk, h, -1).swapaxes(0, 1)
+    offs = jnp.arange(n) * chunk
+
+    def body(_, inp):
+        qnb, qrb, off = inp
+        sc = (jnp.einsum("bchn,bthn->bhct", qnb, k_nope)
+              + jnp.einsum("bchd,btd->bhct", qrb, k_rope)).astype(jnp.float32)
+        sc = sc * scale
+        qi = off + jnp.arange(chunk)[:, None]
+        kj = jnp.arange(s)[None, :]
+        sc = sc + jnp.where(kj <= qi, 0.0, NEG_INF)[None, None]
+        pr = jax.nn.softmax(sc, axis=-1).astype(v.dtype)
+        return None, jnp.einsum("bhct,bthv->bchv", pr, v)
+
+    _, outs = jax.lax.scan(body, None, (qn, qr, offs))
+    return outs.swapaxes(0, 1).reshape(b, s, h, -1)

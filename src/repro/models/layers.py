@@ -1,0 +1,93 @@
+"""Shared primitives: RMSNorm, RoPE (partial-rotary), MLPs, initializers.
+
+Pure functional style: ``init_*`` returns a params pytree, ``*_fwd`` applies
+it. No flax/optax in this environment.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(rng, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(rng, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def init_rmsnorm(d: int, dtype) -> jax.Array:
+    return jnp.ones((d,), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE with partial-rotary support (stablelm-2 rotary_pct=0.25).
+# ---------------------------------------------------------------------------
+
+def rope_freqs(rot_dim: int, theta: float) -> jax.Array:
+    """(rot_dim/2,) inverse frequencies, float32."""
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rotary_pct: float = 1.0) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32. Rotates first rot_dim dims."""
+    d = x.shape[-1]
+    rot = int(d * rotary_pct)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    inv = rope_freqs(rot, theta)                              # (rot/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv      # (B, S, rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]                         # (B, S, 1, rot/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)    # rotate-half pairing
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU — llama family).
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, d_model: int, d_ff: int, dtype) -> Params:
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {
+        "wi_gate": dense_init(r1, d_model, d_ff, dtype),
+        "wi_up": dense_init(r2, d_model, d_ff, dtype),
+        "wo": dense_init(r3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_fwd(p: Params, x: jax.Array) -> jax.Array:
+    from repro.launch.sharding import constrain
+    h = jax.nn.silu(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    h = constrain(h, ("data", None, "model"))
+    return h @ p["wo"]
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       ignore_index: int = -1) -> jax.Array:
+    """Mean token cross-entropy; labels == ignore_index are masked out."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels != ignore_index)
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

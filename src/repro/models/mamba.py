@@ -1,0 +1,128 @@
+"""Mamba-1 selective-SSM block (falcon-mamba, jamba's mamba layers).
+
+Prefill/train uses a sequential ``lax.scan`` over time (the chunked Pallas
+kernel in ``repro.kernels.mamba_scan`` is the TPU perf path; this module is
+the jnp reference data path and the dry-run default).
+
+Decode keeps a fixed-size recurrent cache per layer:
+    conv_state: (B, d_conv-1, d_inner)   — causal-conv tail window
+    ssm_state:  (B, d_inner, d_state)    — SSM hidden state
+This fixed-size state is the cacheable per-session artifact for AdaptCache
+on SSM archs (quantization applies; token dropping does not — DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import constrain
+from repro.models.layers import Params, dense_init
+
+
+def init_mamba(rng, cfg: ModelConfig, dtype) -> Params:
+    s = cfg.ssm
+    d_in = cfg.d_inner
+    dt_rank = cfg.resolved_dt_rank
+    ks = jax.random.split(rng, 7)
+    # A initialised to -[1..d_state] per channel (S4D-real), stored as log.
+    a_init = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32)[None, :],
+                      (d_in, 1))
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, d_in), dtype=jnp.float32)
+                   * (s.d_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": dense_init(ks[2], d_in, dt_rank + 2 * s.d_state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_in, dtype),
+        "dt_bias": (jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[4], (d_in,)) * 0.099 + 0.001,
+                     1e-4)))).astype(dtype),
+        "a_log": jnp.log(a_init).astype(jnp.float32),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[5], d_in, cfg.d_model, dtype),
+    }
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    s = cfg.ssm
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, s.d_state), jnp.float32),
+    }
+
+
+def _ssm_params(p: Params, cfg: ModelConfig, xc: jax.Array):
+    """xc: (..., d_inner) post-conv activations -> (dt, B, C) selective params."""
+    s = cfg.ssm
+    dt_rank = cfg.resolved_dt_rank
+    proj = xc @ p["x_proj"]                                   # (..., dtr + 2n)
+    dt = proj[..., :dt_rank] @ p["dt_proj"] + p["dt_bias"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))              # (..., d_inner)
+    b_sel = proj[..., dt_rank:dt_rank + s.d_state].astype(jnp.float32)
+    c_sel = proj[..., dt_rank + s.d_state:].astype(jnp.float32)
+    return dt, b_sel, c_sel
+
+
+def mamba_fwd(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,                    # (B, S, d_model)
+    cache: Optional[Params] = None,
+    decode: bool = False,
+) -> Tuple[jax.Array, Params]:
+    s = cfg.ssm
+    d_in = cfg.d_inner
+    b, seq, _ = x.shape
+
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                          # (B,S,d_in) each
+    xs = constrain(xs, ("data", None, "model"))
+
+    if decode:
+        assert seq == 1 and cache is not None
+        window = jnp.concatenate([cache["conv"], xs], axis=1)  # (B, d_conv, d_in)
+        new_conv = window[:, 1:]
+        xc = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+        xc = jax.nn.silu(xc)[:, None]                          # (B,1,d_in)
+        dt, b_sel, c_sel = _ssm_params(p, cfg, xc)
+        a = -jnp.exp(p["a_log"])                               # (d_in, n)
+        da = jnp.exp(dt[:, 0, :, None] * a)                    # (B,d_in,n)
+        dbx = (dt[:, 0, :, None] * b_sel[:, 0, None, :]
+               * xc[:, 0, :, None].astype(jnp.float32))
+        h = cache["ssm"] * da + dbx                            # (B,d_in,n)
+        y = jnp.einsum("bdn,bn->bd", h, c_sel[:, 0])
+        y = y + p["d_skip"] * xc[:, 0].astype(jnp.float32)
+        y = (y.astype(x.dtype) * jax.nn.silu(z[:, 0]))[:, None]
+        return y @ p["out_proj"], {"conv": new_conv, "ssm": h}
+
+    # full-sequence: causal depthwise conv then sequential scan over time
+    pad = jnp.zeros((b, s.d_conv - 1, d_in), xs.dtype) if cache is None else cache["conv"]
+    padded = jnp.concatenate([pad, xs], axis=1)                # (B, S+c-1, d_in)
+    xc = sum(padded[:, i:i + seq] * p["conv_w"][i] for i in range(s.d_conv))
+    xc = jax.nn.silu(xc + p["conv_b"])                         # (B,S,d_in)
+
+    dt, b_sel, c_sel = _ssm_params(p, cfg, xc)                 # (B,S,·)
+    a = -jnp.exp(p["a_log"])                                   # (d_in,n)
+    da = jnp.exp(dt[..., None] * a)                            # (B,S,d_in,n)
+    dbx = dt[..., None] * b_sel[:, :, None, :] * xc[..., None].astype(jnp.float32)
+
+    h0 = (jnp.zeros((b, d_in, s.d_state), jnp.float32)
+          if cache is None else cache["ssm"])
+
+    def step(h, inp):
+        da_t, dbx_t, c_t = inp
+        h = h * da_t + dbx_t                                   # (B,d_in,n)
+        y_t = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y_t
+
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (da.swapaxes(0, 1), dbx.swapaxes(0, 1), c_sel.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1)                                      # (B,S,d_in)
+    y = y + p["d_skip"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    new_cache = {"conv": padded[:, -(s.d_conv - 1):], "ssm": hT}
+    return y @ p["out_proj"], new_cache

@@ -1,0 +1,5 @@
+from repro.serving.engine import RequestResult, ServingEngine, summarize  # noqa: F401
+from repro.serving.runner import ModelRunner  # noqa: F401
+from repro.serving.workload import (  # noqa: F401
+    Context, Request, make_contexts, poisson_requests,
+)

@@ -1,0 +1,116 @@
+"""Engine builders: AdaptCache + the paper's four baselines on one rig.
+
+    build_engine(..., policy="adaptive", alpha=0.01)
+    build_engine(..., policy=("kivi", 0.16))          # KIVI LRU
+    build_engine(..., policy=("streaming_llm", 0.25)) # StreamingLLM LRU
+    build_engine(..., policy=("none", 1.0))           # Without Compression
+    build_engine(..., policy="prefill")               # always recompute
+
+Tier sizing: capacities are given in *average-entry units* and bandwidths
+are scaled by (full-scale entry bytes / smoke entry bytes), so the
+DRAM-vs-SSD pressure and delay regime match the paper's 100 GB/400 GB
+A100 box while the actual stored bytes are smoke-scale (DESIGN.md §8.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.compression import default_registry
+from repro.core.controller import AdaptCacheController
+from repro.core.estimator import (
+    DEFAULT_DECOMPRESS_BPS, DelayProfile, FrequencyEstimator, QualityEstimator,
+)
+from repro.core.policy import AdaptivePolicy, FixedPolicy
+from repro.serving.engine import ServingEngine
+from repro.serving.runner import ModelRunner
+from repro.serving.timemodel import A100, DeviceModel, TimeModel
+from repro.serving.workload import Context
+from repro.storage.tier import DRAMTier, DeviceSpec, SSDTier
+
+PolicySpec = Union[str, Tuple[str, float]]
+
+
+@dataclasses.dataclass
+class EngineRig:
+    engine: ServingEngine
+    controller: AdaptCacheController
+    quality_est: Optional[QualityEstimator]
+    clock: list
+
+
+def build_engine(runner: ModelRunner, contexts: Sequence[Context],
+                 full_cfg: ModelConfig, n_active_params: int,
+                 policy: PolicySpec = "adaptive", alpha: float = 0.01,
+                 dram_entries: float = 4.0, ssd_entries: float = 24.0,
+                 device: DeviceModel = A100,
+                 quality_est: Optional[QualityEstimator] = None,
+                 ssd_root: Optional[str] = None) -> EngineRig:
+    methods = default_registry()
+    smoke_cfg = runner.model.cfg
+
+    # ---- entry-size scaling: smoke bytes <-> full-scale bytes ----
+    avg_tokens = float(np.mean([len(c.tokens) for c in contexts]))
+    smoke_entry = max(1.0, avg_tokens * smoke_cfg.kv_bytes_per_token() * 2.0)
+    full_entry = avg_tokens * max(full_cfg.kv_bytes_per_token(), 1)
+    scale = full_entry / smoke_entry
+
+    dram_spec = DeviceSpec("dram", int(dram_entries * smoke_entry),
+                           16e9 / scale, 16e9 / scale, 20e-6)
+    ssd_spec = DeviceSpec("ssd", int(ssd_entries * smoke_entry),
+                          1e9 / scale, 1e9 / scale, 100e-6)
+    tiers = {"dram": DRAMTier(dram_spec),
+             "ssd": SSDTier(ssd_spec, root=ssd_root)}
+    order = ["dram", "ssd"]
+
+    freq = FrequencyEstimator(halflife_s=600.0)
+    delay = DelayProfile({m: (bps / scale if np.isfinite(bps) else bps)
+                          for m, bps in DEFAULT_DECOMPRESS_BPS.items()})
+    qe = quality_est or QualityEstimator()
+
+    if policy == "adaptive":
+        pol = AdaptivePolicy(methods, tiers, order, qe, freq, delay,
+                             alpha=alpha)
+    elif policy == "prefill":
+        # zero-capacity tiers: every request misses -> recompute
+        tiers = {"dram": DRAMTier(DeviceSpec("dram", 0, 16e9, 16e9)),
+                 "ssd": SSDTier(DeviceSpec("ssd", 0, 1e9, 1e9),
+                                root=ssd_root)}
+        pol = FixedPolicy(methods, order, "none", 1.0)
+    else:
+        mname, rate = policy
+        pol = FixedPolicy(methods, order, mname, rate)
+
+    clock = [0.0]
+    ctrl = AdaptCacheController(methods, tiers, order, pol, delay, freq,
+                                clock=lambda: clock[0])
+    tm = TimeModel(full_cfg, device, n_active_params)
+    eng = ServingEngine(runner, ctrl, tm, contexts)
+    return EngineRig(eng, ctrl, qe, clock)
+
+
+def fit_quality_estimator(rig: EngineRig, contexts: Sequence[Context],
+                          samples_per_task: int = 3) -> QualityEstimator:
+    """Paper's offline profiling: sample entries per dataset, run probe
+    questions through compress->generate->compare, fit the curves."""
+    qe = rig.quality_est
+    by_task: Dict[str, list] = {}
+    for c in contexts:
+        by_task.setdefault(c.task_type, []).append(c)
+    for task, ctxs in by_task.items():
+        sample = ctxs[:samples_per_task]
+        kvs, probes = [], []
+        for c in sample:
+            kv = rig.engine.runner.prefill_entry(c.tokens)
+            kvs.append(kv)
+            probes.append(rig.engine.quality_probe(c))
+
+        def probe_dispatch(kv, mname, rate, _kvs=kvs, _probes=probes):
+            i = next(j for j, K in enumerate(_kvs) if K is kv)
+            return _probes[i](kv, mname, rate)
+
+        qe.fit(task, rig.engine.controller.methods, kvs, probe_dispatch)
+    return qe

@@ -1,0 +1,136 @@
+"""Page-granular prefix caching (DESIGN.md §4 adaptation #2).
+
+The paper stores one KV entry per context; production stores (LMCache,
+vLLM prefix caching) page the context into fixed-token chunks keyed by a
+rolling prefix hash, so a request whose context shares only a PREFIX with
+a cached one still loads the matched pages and prefills just the suffix.
+
+    keys = chain_hash(pages of 256 tokens)       # key_i commits to pages<=i
+    match_prefix(tokens) -> longest cached page run
+    split_kv / join_kv                           # KVData <-> page KVData
+
+Pages are ordinary AdaptCache entries: the policy compresses/places/evicts
+each page independently (popular early pages of a hot document stay in
+DRAM at high quality; deep-tail pages compress harder or spill to SSD —
+finer-grained utility than whole-context entries, a beyond-paper
+extension).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.compression.base import KVData
+from repro.core.controller import AdaptCacheController, FetchResult
+
+PAGE_TOKENS = 256
+TOKEN_ARRAYS = ("k", "v", "ckv", "krope", "positions")
+
+
+def page_keys(tokens: np.ndarray, page_tokens: int = PAGE_TOKENS
+              ) -> List[str]:
+    """Rolling prefix-hash chain: key_i identifies pages[0..i] content."""
+    keys = []
+    h = hashlib.sha1()
+    n_pages = len(tokens) // page_tokens
+    for i in range(n_pages):
+        h.update(np.ascontiguousarray(
+            tokens[i * page_tokens:(i + 1) * page_tokens]).tobytes())
+        keys.append(f"pg-{h.hexdigest()[:16]}-{i}")
+    return keys
+
+
+def split_kv(kv: KVData, page_tokens: int = PAGE_TOKENS
+             ) -> Tuple[List[KVData], KVData]:
+    """Split a context entry into page entries (+ the sub-page remainder).
+
+    Non-token arrays (SSM states) are NOT paged — they summarize the whole
+    prefix and stay with the final page (remainder)."""
+    t = kv["k" if "k" in kv else "ckv"].shape[1] if (
+        "k" in kv or "ckv" in kv) else 0
+    n_pages = t // page_tokens
+    pages = []
+    for i in range(n_pages):
+        lo, hi = i * page_tokens, (i + 1) * page_tokens
+        page: KVData = {}
+        for name, a in kv.items():
+            if name == "positions":
+                page[name] = np.asarray(a[lo:hi])
+            elif name in TOKEN_ARRAYS:
+                page[name] = np.ascontiguousarray(a[:, lo:hi])
+        pages.append(page)
+    rem: KVData = {}
+    for name, a in kv.items():
+        if name == "positions":
+            rem[name] = np.asarray(a[n_pages * page_tokens:])
+        elif name in TOKEN_ARRAYS:
+            rem[name] = np.ascontiguousarray(a[:, n_pages * page_tokens:])
+        else:
+            rem[name] = np.asarray(a)          # ssm state stays whole
+    return pages, rem
+
+
+def join_kv(pages: Sequence[KVData]) -> KVData:
+    """Concatenate page entries back into one KVData (token order)."""
+    assert pages
+    out: KVData = {}
+    for name in pages[0]:
+        if name == "positions":
+            out[name] = np.concatenate([p[name] for p in pages])
+        elif name in TOKEN_ARRAYS:
+            out[name] = np.concatenate([p[name] for p in pages], axis=1)
+        else:
+            out[name] = pages[-1][name]
+    return out
+
+
+@dataclasses.dataclass
+class PrefixMatch:
+    n_pages: int
+    n_tokens: int
+    kv: Optional[KVData]            # joined matched pages (decompressed)
+    load_delay_s: float
+    tiers: List[str]
+
+
+class PagedPrefixCache:
+    """Page-granular front-end over an AdaptCacheController."""
+
+    def __init__(self, controller: AdaptCacheController,
+                 page_tokens: int = PAGE_TOKENS):
+        self.controller = controller
+        self.page_tokens = page_tokens
+
+    def insert_context(self, tokens: np.ndarray, kv: KVData,
+                       task_type: str, now: Optional[float] = None) -> int:
+        keys = page_keys(tokens, self.page_tokens)
+        pages, _rem = split_kv(kv, self.page_tokens)
+        n = 0
+        for key, page in zip(keys, pages):
+            if self.controller.lookup(key) is None:
+                self.controller.insert(key, page, task_type, now=now)
+                n += 1
+        return n
+
+    def match_prefix(self, tokens: np.ndarray,
+                     now: Optional[float] = None) -> PrefixMatch:
+        keys = page_keys(tokens, self.page_tokens)
+        fetched: List[FetchResult] = []
+        for key in keys:
+            if self.controller.lookup(key) is None:
+                break
+            r = self.controller.fetch(key, now=now)
+            if r is None:
+                break
+            fetched.append(r)
+        if not fetched:
+            return PrefixMatch(0, 0, None, 0.0, [])
+        kv = join_kv([f.kv for f in fetched])
+        # dropped pages shrink; count ACTUAL kept tokens
+        n_tokens = kv["k" if "k" in kv else "ckv"].shape[1]
+        return PrefixMatch(len(fetched), n_tokens, kv,
+                           sum(f.total_delay_s for f in fetched),
+                           [f.tier for f in fetched])

@@ -1,0 +1,163 @@
+"""ServingEngine: end-to-end AdaptCache serving loop.
+
+Per request (paper Fig. 1 pipeline):
+  lookup(context) ->
+    HIT  : load entry from its tier (+ decompress)      [delay: modeled]
+           build decode cache, answer the question       [delay: modeled]
+    MISS : full prefill (recomputation)                  [delay: modeled]
+           insert the fresh entry into the hierarchy
+  TTFT = queue wait + (load+decompress | prefill) + one decode step.
+
+Compute happens for real on the smoke model (greedy decode, per-request);
+TIME is accounted with the calibrated full-scale model (timemodel.py) so
+TTFT numbers correspond to the paper's A100 + Llama-3.1-8B setting.
+Quality per the paper: similarity (task metric) of the answer generated
+from the compressed entry vs the answer from uncompressed prefill.
+
+A slot-based continuous-batching scheduler (scheduler.py) orders request
+admission; decode batching across requests is simulated time-wise (batch
+size feeds decode_step_s) while token generation runs per-request for
+bit-exact quality attribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.controller import AdaptCacheController
+from repro.serving.metrics import quality_score
+from repro.serving.runner import ModelRunner
+from repro.serving.timemodel import TimeModel
+from repro.serving.workload import Context, Request
+
+
+@dataclasses.dataclass
+class RequestResult:
+    req_id: int
+    context_key: str
+    task_type: str
+    arrival_s: float
+    ttft_s: float
+    queue_s: float
+    load_s: float
+    prefill_s: float
+    hit_tier: Optional[str]          # None = miss (prefilled)
+    method: str
+    rate: float
+    quality: float
+    answer: List[int]
+
+
+class ServingEngine:
+    def __init__(self, runner: ModelRunner, controller: AdaptCacheController,
+                 time_model: TimeModel, contexts: Sequence[Context],
+                 max_new_tokens: int = 24, decode_batch: int = 8):
+        self.runner = runner
+        self.controller = controller
+        self.tm = time_model
+        self.contexts: Dict[str, Context] = {c.key: c for c in contexts}
+        self.max_new = max_new_tokens
+        self.decode_batch = decode_batch
+        self._ref_cache: Dict[str, List[int]] = {}
+
+    # -- reference answers (uncompressed prefill), cached -----------------------
+    def _probe_key(self, ctx_key: str, question: np.ndarray,
+                   max_new: int) -> str:
+        h = hashlib.sha1(np.asarray(question).tobytes()).hexdigest()[:10]
+        return f"{ctx_key}:{h}:{max_new}"
+
+    def reference_answer(self, ctx: Context, question: np.ndarray,
+                         max_new: Optional[int] = None) -> List[int]:
+        n = self.max_new if max_new is None else max_new
+        pk = self._probe_key(ctx.key, question, n)
+        if pk not in self._ref_cache:
+            ans, _ = self.runner.generate_uncompressed(ctx.tokens, question,
+                                                       n)
+            self._ref_cache[pk] = ans
+        return self._ref_cache[pk]
+
+    # -- serving loop -------------------------------------------------------------
+    def process(self, requests: Sequence[Request],
+                skip_quality: bool = False) -> List[RequestResult]:
+        results = []
+        server_free_at = 0.0
+        for req in sorted(requests, key=lambda r: r.arrival_s):
+            ctx = self.contexts[req.context_key]
+            start = max(req.arrival_s, server_free_at)
+            queue_s = start - req.arrival_s
+
+            fetched = self.controller.fetch(req.context_key, now=start)
+            t = len(ctx.tokens)
+            if fetched is None:
+                # MISS: prefill (recomputation) and admit into the hierarchy
+                kv = self.runner.prefill_entry(ctx.tokens)
+                prefill_s = self.tm.prefill_s(t)
+                load_s = 0.0
+                self.controller.insert(req.context_key, kv, ctx.task_type,
+                                       now=start)
+                method, rate, tier = "none", 1.0, None
+                answer = self.runner.generate_from_kvdata(
+                    kv, t, req.question, req.max_new_tokens)
+            else:
+                kv = fetched.kv
+                load_s = fetched.total_delay_s
+                prefill_s = 0.0
+                method, rate, tier = (fetched.method, fetched.rate,
+                                      fetched.tier)
+                answer = self.runner.generate_from_kvdata(
+                    kv, t, req.question, req.max_new_tokens)
+
+            decode1 = self.tm.decode_step_s(self.decode_batch, t)
+            # question tokens are teacher-forced decode steps before TTFT
+            ttft = queue_s + load_s + prefill_s \
+                + decode1 * (len(req.question) + 1)
+            server_free_at = start + load_s + prefill_s \
+                + decode1 * (len(req.question) + req.max_new_tokens)
+
+            if skip_quality:
+                q = 1.0
+            else:
+                # reference must match the request's generation budget
+                ref = self.reference_answer(ctx, req.question,
+                                            req.max_new_tokens)
+                q = quality_score(ctx.task_type, answer, ref)
+            results.append(RequestResult(
+                req.req_id, req.context_key, ctx.task_type, req.arrival_s,
+                ttft, queue_s, load_s, prefill_s, tier, method, rate, q,
+                answer))
+        return results
+
+    # -- estimator probe --------------------------------------------------------
+    def quality_probe(self, ctx: Context):
+        """Returns probe(kv, method, rate) for QualityEstimator.fit."""
+        question = ctx.probes[0]
+        ref = self.reference_answer(ctx, question)
+
+        def probe(kv, method_name: str, rate: float) -> float:
+            m = self.controller.methods[method_name]
+            entry = m.compress(kv, rate)
+            dkv = m.decompress(entry)
+            ans = self.runner.generate_from_kvdata(
+                dkv, len(ctx.tokens), question, self.max_new)
+            return quality_score(ctx.task_type, ans, ref)
+        return probe
+
+
+def summarize(results: Sequence[RequestResult]) -> Dict[str, float]:
+    ttfts = np.array([r.ttft_s for r in results])
+    quals = np.array([r.quality for r in results])
+    hits = [r for r in results if r.hit_tier is not None]
+    out = {
+        "n": len(results),
+        "ttft_mean_s": float(ttfts.mean()),
+        "ttft_p50_s": float(np.percentile(ttfts, 50)),
+        "ttft_p90_s": float(np.percentile(ttfts, 90)),
+        "quality_mean": float(quals.mean()),
+        "hit_rate": len(hits) / max(1, len(results)),
+        "hit_rate_dram": sum(r.hit_tier == "dram" for r in results) / max(1, len(results)),
+        "hit_rate_ssd": sum(r.hit_tier == "ssd" for r in results) / max(1, len(results)),
+    }
+    return out

@@ -1,0 +1,50 @@
+"""Device time model: maps workload shapes to serving-device compute time.
+
+The benchmarks run smoke-scale models on CPU, so wall-clock is not
+representative; TTFT accounting uses this calibrated analytic model at the
+FULL architecture scale (the paper's A100 + Llama-3.1-8B by default, TPU
+v5e constants available for the dry-run configs).
+
+    prefill_s(T)  = 2 * N_active * T / (peak_flops * mfu)
+    decode_step_s(B, T_ctx) = max(flops-bound, HBM-bound KV+weight reads)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    name: str
+    peak_flops: float          # /s
+    hbm_bw: float              # bytes/s
+    mfu_prefill: float = 0.45
+    mfu_decode: float = 0.08
+
+
+A100 = DeviceModel("a100", 312e12, 2.0e12)
+TPU_V5E = DeviceModel("tpu_v5e", 197e12, 819e9)
+
+
+@dataclasses.dataclass
+class TimeModel:
+    cfg: ModelConfig                  # FULL-scale architecture
+    device: DeviceModel
+    n_active_params: int
+
+    def prefill_s(self, n_tokens: int) -> float:
+        flops = 2.0 * self.n_active_params * n_tokens
+        return flops / (self.device.peak_flops * self.device.mfu_prefill)
+
+    def decode_step_s(self, batch: int, ctx_tokens: int,
+                      kv_bytes_per_token: float = None) -> float:
+        kvb = (self.cfg.kv_bytes_per_token()
+               if kv_bytes_per_token is None else kv_bytes_per_token)
+        flops = 2.0 * self.n_active_params * batch
+        t_flops = flops / (self.device.peak_flops * self.device.mfu_decode)
+        # weights read once per step + per-seq KV reads
+        bytes_rd = 2.0 * self.n_active_params + batch * ctx_tokens * kvb
+        t_mem = bytes_rd / self.device.hbm_bw
+        return max(t_flops, t_mem)

@@ -1,0 +1,114 @@
+"""Synthetic serving workloads mirroring the paper's evaluation setup (§3):
+contexts from three task families (QA / summarization / coding), reused by
+requests arriving as a Poisson process at a configurable rate.
+
+Contexts are token sequences with task-dependent structure so that lossy KV
+compression has a *measurable*, task-dependent quality effect on a small
+trained model:
+  qa            — key/value fact lists; probes ask for a value mid-context
+                  (middle tokens matter -> token dropping is harmful,
+                  quantization mild: the paper's 'new information' case)
+  summarization — highly redundant repeated motifs (drop-friendly: only the
+                  start/end matter, the paper's sink+recent case)
+  coding        — structured def/call patterns with long-range references
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Context:
+    key: str
+    task_type: str
+    tokens: np.ndarray           # (T,) int32
+    probes: List[np.ndarray]     # question token seqs
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    context_key: str
+    question: np.ndarray
+    arrival_s: float
+    task_type: str
+    max_new_tokens: int = 24
+
+
+def _qa_context(rng, vocab: int, length: int, n_probes: int):
+    # fact layout: [SEP key val val] repeated; keys/vals from disjoint ranges
+    sep = 5
+    n_facts = length // 4
+    keys = rng.randint(vocab // 4, vocab // 2, n_facts)
+    vals = rng.randint(vocab // 2, vocab - 8, (n_facts, 2))
+    toks = np.stack([np.full(n_facts, sep), keys, vals[:, 0], vals[:, 1]],
+                    axis=1).reshape(-1)[:length]
+    probes = []
+    for _ in range(n_probes):
+        i = rng.randint(n_facts - 1)
+        probes.append(np.array([6, keys[i]], dtype=np.int32))  # "what is key?"
+    return toks.astype(np.int32), probes
+
+
+def _summary_context(rng, vocab: int, length: int, n_probes: int):
+    motif = rng.randint(8, vocab // 2, rng.randint(8, 16))
+    reps = length // len(motif) + 1
+    noise = rng.randint(8, vocab - 8, length)
+    toks = np.tile(motif, reps)[:length]
+    mask = rng.rand(length) < 0.15
+    toks = np.where(mask, noise, toks)
+    probes = [np.array([7], dtype=np.int32) for _ in range(n_probes)]
+    return toks.astype(np.int32), probes
+
+
+def _coding_context(rng, vocab: int, length: int, n_probes: int):
+    # def <name> <body...> ... call sites reference earlier names
+    toks, names = [], []
+    while len(toks) < length:
+        name = int(rng.randint(vocab // 4, vocab // 2))
+        names.append(name)
+        body = rng.randint(vocab // 2, vocab - 8, rng.randint(6, 12)).tolist()
+        toks += [3, name] + body + [4, int(names[rng.randint(len(names))])]
+    toks = np.array(toks[:length], dtype=np.int32)
+    probes = [np.array([4, names[rng.randint(len(names))]], dtype=np.int32)
+              for _ in range(n_probes)]
+    return toks, probes
+
+
+_GEN = {"qa": _qa_context, "summarization": _summary_context,
+        "coding": _coding_context}
+
+
+def make_contexts(rng: np.random.RandomState, vocab: int, n_per_task: int,
+                  min_len: int = 192, max_len: int = 768,
+                  n_probes: int = 4,
+                  tasks: Sequence[str] = ("qa", "summarization", "coding"),
+                  ) -> List[Context]:
+    out = []
+    for task in tasks:
+        for i in range(n_per_task):
+            length = int(rng.randint(min_len, max_len))
+            toks, probes = _GEN[task](rng, vocab, length, n_probes)
+            out.append(Context(f"{task}-{i}", task, toks, probes))
+    return out
+
+
+def poisson_requests(rng: np.random.RandomState, contexts: List[Context],
+                     rate_hz: float, duration_s: float,
+                     zipf_a: float = 1.2, max_new_tokens: int = 24,
+                     ) -> List[Request]:
+    """Poisson arrivals; context popularity ~ Zipf (multi-turn reuse)."""
+    reqs, t, rid = [], 0.0, 0
+    order = rng.permutation(len(contexts))
+    while t < duration_s:
+        t += rng.exponential(1.0 / rate_hz)
+        ci = order[int(rng.zipf(zipf_a)) % len(contexts)]
+        ctx = contexts[ci]
+        q = ctx.probes[int(rng.randint(len(ctx.probes)))]
+        reqs.append(Request(rid, ctx.key, q, t, ctx.task_type,
+                            max_new_tokens))
+        rid += 1
+    return reqs

@@ -1,0 +1,3 @@
+from repro.storage.tier import (  # noqa: F401
+    DRAMTier, DeviceSpec, PAPER_DRAM, PAPER_SSD, SSDTier, Tier,
+)

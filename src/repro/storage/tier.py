@@ -1,0 +1,164 @@
+"""Storage tiers for the KV cache hierarchy.
+
+Two concrete tiers matching the paper's evaluation (DRAM + SSD) plus the
+device spec abstraction so the same policy runs with TPU-host constants
+(DESIGN.md §4). Realism requirements honored:
+
+  * DRAMTier holds real numpy buffers (bytes are resident);
+  * SSDTier serializes entries to real files (zstd-framed, CRC-checked)
+    under a spool directory — bytes genuinely leave memory;
+  * delay accounting is a calibrated model (default: the paper's 1 GB/s
+    disk; DRAM->device 16 GB/s PCIe-class) so benchmark numbers are
+    host-independent, while ``measure=True`` uses actual wall-clock I/O.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import struct
+import tempfile
+import time
+import zlib
+from typing import Any, Dict, Iterable, Optional
+
+import numpy as np
+import zstandard
+
+from repro.core.compression.base import CompressedEntry
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    name: str
+    capacity_bytes: int
+    read_bw: float          # bytes/s toward the accelerator
+    write_bw: float
+    latency_s: float = 0.0
+
+
+# Paper constants: 100 GB DRAM, 400 GB SSD @ 1 GB/s (A100 box, §3).
+PAPER_DRAM = DeviceSpec("dram", 100 << 30, 16e9, 16e9, 20e-6)
+PAPER_SSD = DeviceSpec("ssd", 400 << 30, 1e9, 1e9, 100e-6)
+
+
+class Tier:
+    """Base tier: capacity accounting + load-delay model."""
+
+    def __init__(self, spec: DeviceSpec):
+        self.spec = spec
+        self.used_bytes = 0
+        self._meta: Dict[str, Dict[str, Any]] = {}
+
+    # -- delay model --------------------------------------------------------
+    def load_delay(self, nbytes: int) -> float:
+        return self.spec.latency_s + nbytes / self.spec.read_bw
+
+    def store_delay(self, nbytes: int) -> float:
+        return self.spec.latency_s + nbytes / self.spec.write_bw
+
+    # -- inventory ----------------------------------------------------------
+    def has(self, key: str) -> bool:
+        return key in self._meta
+
+    def keys(self) -> Iterable[str]:
+        return self._meta.keys()
+
+    def entry_nbytes(self, key: str) -> int:
+        return self._meta[key]["nbytes"]
+
+    def entry_info(self, key: str) -> Dict[str, Any]:
+        return self._meta[key]
+
+    @property
+    def free_bytes(self) -> int:
+        return self.spec.capacity_bytes - self.used_bytes
+
+    def __len__(self) -> int:
+        return len(self._meta)
+
+
+class DRAMTier(Tier):
+    def __init__(self, spec: DeviceSpec = PAPER_DRAM):
+        super().__init__(spec)
+        self._store: Dict[str, CompressedEntry] = {}
+
+    def put(self, key: str, entry: CompressedEntry) -> int:
+        if key in self._store:
+            self.evict(key)
+        nb = entry.nbytes
+        self._store[key] = entry
+        self._meta[key] = {"nbytes": nb, "method": entry.method,
+                           "rate": entry.rate}
+        self.used_bytes += nb
+        return nb
+
+    def get(self, key: str) -> CompressedEntry:
+        return self._store[key]
+
+    def evict(self, key: str) -> None:
+        self.used_bytes -= self._meta.pop(key)["nbytes"]
+        del self._store[key]
+
+
+_MAGIC = b"ADKV"
+
+
+class SSDTier(Tier):
+    """File-backed tier: one zstd-framed, CRC-checked file per entry."""
+
+    def __init__(self, spec: DeviceSpec = PAPER_SSD,
+                 root: Optional[str] = None, measure: bool = False):
+        super().__init__(spec)
+        self.root = root or tempfile.mkdtemp(prefix="adaptcache_ssd_")
+        self.measure = measure
+        self._cctx = zstandard.ZstdCompressor(level=1)
+        self._dctx = zstandard.ZstdDecompressor()
+        os.makedirs(self.root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key.replace("/", "_") + ".kv")
+
+    def put(self, key: str, entry: CompressedEntry) -> int:
+        if key in self._meta:
+            self.evict(key)
+        raw = entry.tobytes()
+        framed = self._cctx.compress(raw)
+        crc = zlib.crc32(raw)
+        path = self._path(key)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(_MAGIC)
+            f.write(struct.pack("<IQ", crc, len(raw)))
+            f.write(framed)
+        os.replace(tmp, path)                       # atomic
+        # capacity accounting uses the LOGICAL entry size (policy view);
+        # zstd framing is transparent transport compression.
+        nb = entry.nbytes
+        self._meta[key] = {"nbytes": nb, "method": entry.method,
+                           "rate": entry.rate, "meta": entry.meta,
+                           "disk_bytes": len(framed) + 16, "path": path}
+        self.used_bytes += nb
+        return nb
+
+    def get(self, key: str) -> CompressedEntry:
+        info = self._meta[key]
+        t0 = time.perf_counter()
+        with open(info["path"], "rb") as f:
+            assert f.read(4) == _MAGIC, f"corrupt frame for {key}"
+            crc, orig_len = struct.unpack("<IQ", f.read(12))
+            raw = self._dctx.decompress(f.read(), max_output_size=orig_len)
+        if zlib.crc32(raw) != crc:
+            raise IOError(f"CRC mismatch for entry {key} — corrupt SSD page")
+        entry = CompressedEntry.frombytes(raw, info["method"], info["rate"],
+                                          info["meta"])
+        if self.measure:
+            info["last_read_s"] = time.perf_counter() - t0
+        return entry
+
+    def evict(self, key: str) -> None:
+        info = self._meta.pop(key)
+        self.used_bytes -= info["nbytes"]
+        try:
+            os.unlink(info["path"])
+        except FileNotFoundError:
+            pass

@@ -1,0 +1,118 @@
+"""Compression methods: roundtrip, analytic size == actual, semantics."""
+import numpy as np
+import pytest
+
+from repro.core.compression import (
+    DropQuantCompression, KIVICompression, NoCompression,
+    StreamingLLMCompression, default_registry, kv_nbytes,
+)
+
+RNG = np.random.RandomState(4)
+
+
+def make_kv(L=3, T=128, F=96):
+    return {"k": RNG.randn(L, T, F).astype(np.float32),
+            "v": RNG.randn(L, T, F).astype(np.float32),
+            "positions": np.arange(T, dtype=np.int32)}
+
+
+def make_ssm():
+    return {"ssm": RNG.randn(4, 64, 16).astype(np.float32),
+            "conv": RNG.randn(4, 3, 64).astype(np.float32)}
+
+
+@pytest.mark.parametrize("method_name", ["none", "kivi", "streaming_llm",
+                                         "drop_kivi"])
+def test_estimate_equals_actual(method_name):
+    m = default_registry()[method_name]
+    kv = make_kv()
+    for rate in m.rates(kv):
+        est = m.estimate_nbytes(kv, rate)
+        c = m.compress(kv, rate)
+        assert c.nbytes == est, (method_name, rate)
+
+
+def test_kivi_error_bounded_by_scale():
+    m = KIVICompression()
+    kv = make_kv()
+    for rate in m.rates(kv):
+        c = m.compress(kv, rate)
+        d = m.decompress(c)
+        for name in ("k", "v"):
+            # elementwise error <= max scale of the quantizer
+            smax = np.abs(c.arrays[f"{name}.scale"]).max()
+            assert np.abs(d[name] - kv[name]).max() <= smax + 1e-6
+
+
+def test_kivi_monotone_quality():
+    """More bits -> strictly lower reconstruction error."""
+    m = KIVICompression()
+    kv = make_kv()
+    errs = []
+    for bits in (8, 4, 2):
+        c = m.compress(kv, 0.0, bits=bits)
+        d = m.decompress(c)
+        errs.append(float(np.abs(d["k"] - kv["k"]).mean()))
+    assert errs[0] < errs[1] < errs[2]
+
+
+def test_streaming_keeps_sinks_and_recents():
+    m = StreamingLLMCompression(n_sink=4)
+    kv = make_kv(T=128)
+    c = m.compress(kv, 0.25)
+    pos = c.arrays["positions"]
+    assert list(pos[:4]) == [0, 1, 2, 3]
+    n_keep = len(pos)
+    assert abs(n_keep - 32) <= 1
+    assert list(pos[4:]) == list(range(128 - (n_keep - 4), 128))
+    d = m.decompress(c)
+    assert d["k"].shape[1] == n_keep
+    # kept rows are bit-exact (lossless on the kept set)
+    np.testing.assert_array_equal(d["k"], kv["k"][:, pos])
+
+
+def test_streaming_inapplicable_to_ssm():
+    m = StreamingLLMCompression()
+    assert not m.applicable(make_ssm())
+    assert KIVICompression().applicable(make_ssm())
+
+
+def test_streaming_applicable_to_mla_latent():
+    m = StreamingLLMCompression(n_sink=2)
+    kv = {"ckv": RNG.randn(3, 64, 32).astype(np.float32),
+          "krope": RNG.randn(3, 64, 8).astype(np.float32)}
+    assert m.applicable(kv)
+    c = m.compress(kv, 0.5)
+    d = m.decompress(c)
+    assert d["ckv"].shape[1] == len(c.arrays["positions"])
+
+
+def test_drop_kivi_composes():
+    m = DropQuantCompression()
+    kv = make_kv(T=128)
+    rates = m.rates(kv)
+    assert min(rates) < 0.05                     # reaches deep compression
+    c = m.compress(kv, min(rates))
+    d = m.decompress(c)
+    assert d["k"].shape[1] < 128                 # dropped
+    assert c.nbytes < 0.06 * kv_nbytes(kv)
+
+
+def test_ssm_quant_roundtrip():
+    m = KIVICompression()
+    ssm = make_ssm()
+    c = m.compress(ssm, 0.0, bits=8)
+    d = m.decompress(c)
+    assert d["ssm"].shape == ssm["ssm"].shape
+    assert np.abs(d["ssm"] - ssm["ssm"]).max() < 0.05
+
+
+def test_serialization_roundtrip():
+    from repro.core.compression.base import CompressedEntry
+    m = KIVICompression()
+    kv = make_kv()
+    c = m.compress(kv, 0.2)
+    raw = c.tobytes()
+    c2 = CompressedEntry.frombytes(raw, c.method, c.rate, c.meta)
+    for k in c.arrays:
+        np.testing.assert_array_equal(c.arrays[k], c2.arrays[k])

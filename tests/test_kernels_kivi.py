@@ -1,0 +1,62 @@
+"""KIVI kernel: shape/dtype sweep, Pallas(interpret) vs pure-jnp oracle."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.kivi import kernel as kk
+from repro.kernels.kivi import ref as kr
+
+RNG = np.random.RandomState(0)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("shape", [(128, 128), (256, 384), (64, 512)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_quant_pack_matches_ref(bits, shape, dtype):
+    x = jnp.asarray(RNG.randn(*shape).astype(np.float32)).astype(dtype)
+    gs = 32
+    packed, scale, zero = kk.quantize_pallas(x, bits, gs, interpret=True)
+    qt = kr.quantize_ref(x, bits, gs, axis=0)
+    # round-to-even boundaries may flip a handful of codes by 1 LSB
+    diff = np.abs(np.asarray(packed, np.int32) - np.asarray(qt.packed, np.int32))
+    assert (diff > 0).mean() < 2e-3
+    np.testing.assert_allclose(np.asarray(scale), np.asarray(qt.scale),
+                               rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_dequant_roundtrip_error_bound(bits):
+    x = jnp.asarray(RNG.randn(256, 256).astype(np.float32))
+    gs = 64
+    packed, scale, zero = kk.quantize_pallas(x, bits, gs, interpret=True)
+    xd = kk.dequantize_pallas(packed, scale, zero, bits, gs, interpret=True)
+    # |err| <= scale per element (1 LSB of the asymmetric quantizer)
+    smax = np.repeat(np.asarray(scale), gs, axis=0)
+    err = np.abs(np.asarray(xd) - np.asarray(x))
+    assert (err <= smax + 1e-6).all()
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("axis", [0, 1])
+def test_ops_dispatch_pallas_equals_ref(bits, axis, monkeypatch):
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    from repro.kernels.kivi import ops
+    x = jnp.asarray(RNG.randn(128, 192).astype(np.float32))
+    gs = 32
+    qt_p = ops.quantize(x, bits, gs, axis)
+    qt_r = kr.quantize_ref(x, bits, gs, axis)
+    d_p = np.asarray(ops.dequantize(qt_p))
+    d_r = np.asarray(kr.dequantize_ref(qt_r))
+    scale_bound = float(np.abs(qt_r.scale).max()) + 1e-6
+    assert np.abs(d_p - d_r).max() <= scale_bound
+
+
+def test_compression_ratio():
+    x = jnp.asarray(RNG.randn(512, 256).astype(np.float32))
+    for bits, lo, hi in [(2, 0.05, 0.13), (4, 0.11, 0.19), (8, 0.24, 0.32)]:
+        qt = kr.quantize_ref(x, bits, 64, 0)
+        ratio = kr.compressed_nbytes(qt) / x.size / 4
+        assert lo < ratio < hi, (bits, ratio)

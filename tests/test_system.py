@@ -1,0 +1,98 @@
+"""End-to-end behaviour tests for the paper's system: train a small model,
+serve with AdaptCache vs baselines, verify the paper's qualitative claims
+at smoke scale (adaptive gets more fast-tier hits at equal-or-better
+quality than fixed compression; everything beats recompute on TTFT)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving.baselines import build_engine
+from repro.serving.engine import summarize
+from repro.serving.runner import ModelRunner
+from repro.serving.workload import make_contexts, poisson_requests
+from repro.training.data import Pipeline, PipelineConfig
+from repro.training.optimizer import AdamWConfig, wsd_schedule
+from repro.training.train_step import init_train_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def trained_runner():
+    cfg = get_config("adaptcache-8b", smoke=True)
+    model = build_model(cfg)
+    opt = AdamWConfig(lr=wsd_schedule(3e-3, 10, 60, 30))
+    state = init_train_state(model, jax.random.key(0), opt)
+    step = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+    pipe = Pipeline(PipelineConfig(cfg.vocab_size, 160, 8, kind="recall"))
+    l0 = None
+    for i in range(80):
+        b = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+        state, m = step(state, b)
+        if i == 0:
+            l0 = float(m["loss"])
+    # the dense-probe recall task is HARD (needs an induction circuit);
+    # 80 CPU steps only buy partial progress — sanity-check improvement
+    assert float(m["loss"]) < l0
+    return ModelRunner(model, state.params, capacity=512)
+
+
+@pytest.fixture(scope="module")
+def workload(trained_runner):
+    rng = np.random.RandomState(11)
+    cfg = trained_runner.model.cfg
+    contexts = make_contexts(rng, cfg.vocab_size, 3, min_len=128,
+                             max_len=288, n_probes=2)
+    requests = poisson_requests(rng, contexts, rate_hz=0.6, duration_s=50)
+    return contexts, requests
+
+
+def run_policy(trained_runner, contexts, requests, policy, tmp,
+               alpha=0.005):
+    full = get_config("adaptcache-8b")
+    rig = build_engine(trained_runner, contexts, full, 8_030_000_000,
+                       policy=policy, alpha=alpha, dram_entries=2.0,
+                       ssd_entries=8.0, ssd_root=tmp)
+    res = rig.engine.process(requests, skip_quality=True)
+    return summarize(res), rig
+
+
+def test_adaptive_beats_prefill_ttft(trained_runner, workload, tmp_path):
+    contexts, requests = workload
+    s_a, _ = run_policy(trained_runner, contexts, requests, "adaptive",
+                        str(tmp_path / "a"))
+    s_p, _ = run_policy(trained_runner, contexts, requests, "prefill",
+                        str(tmp_path / "p"))
+    assert s_a["ttft_mean_s"] < s_p["ttft_mean_s"]
+    assert s_a["hit_rate"] > 0.3
+
+
+def test_adaptive_dram_hits_exceed_no_compression(trained_runner, workload,
+                                                  tmp_path):
+    contexts, requests = workload
+    s_a, _ = run_policy(trained_runner, contexts, requests, "adaptive",
+                        str(tmp_path / "a2"))
+    s_n, _ = run_policy(trained_runner, contexts, requests, ("none", 1.0),
+                        str(tmp_path / "n"))
+    assert s_a["hit_rate_dram"] >= s_n["hit_rate_dram"]
+
+
+def test_trained_model_quality_sensitivity(trained_runner, workload):
+    """Compression must hurt quality monotonically on the recall task —
+    the signal AdaptCache trades against delay."""
+    contexts, _ = workload
+    ctx = next(c for c in contexts if c.task_type == "qa")
+    q = ctx.probes[0]
+    ref, kv = trained_runner.generate_uncompressed(ctx.tokens, q, 12)
+    from repro.core.compression import KIVICompression
+    from repro.serving.metrics import token_f1
+    m = KIVICompression()
+    quals = []
+    for bits in (8, 2):
+        c = m.compress(kv, 0.0, bits=bits)
+        d = m.decompress(c)
+        ans = trained_runner.generate_from_kvdata(d, len(ctx.tokens), q, 12)
+        quals.append(token_f1(ans, ref))
+    assert quals[0] >= quals[1]          # 8-bit at least as good as 2-bit
+    assert quals[0] > 0.5                # mild compression ~preserves output
