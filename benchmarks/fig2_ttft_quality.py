@@ -52,20 +52,26 @@ def main(out_csv: str = "experiments/fig2_ttft_quality.csv") -> list:
                 "quality": float(np.mean([r.quality for r in rs])),
                 "hit_rate_dram": float(np.mean(
                     [r.hit_tier == "dram" for r in rs])),
+                "load_mean_s": float(np.mean([r.load_s for r in rs])),
+                "prefill_mean_s": float(np.mean([r.prefill_s for r in rs])),
             })
         rows.append({"policy": name, "task": "ALL",
                      "ttft_mean_s": s["ttft_mean_s"],
                      "quality": s["quality_mean"],
-                     "hit_rate_dram": s["hit_rate_dram"]})
+                     "hit_rate_dram": s["hit_rate_dram"],
+                     "load_mean_s": s["load_mean_s"],
+                     "prefill_mean_s": s["prefill_mean_s"]})
         print(f"{name:22s} ttft={s['ttft_mean_s']*1e3:7.1f}ms "
               f"quality={s['quality_mean']:.3f} "
               f"dram={s['hit_rate_dram']:.2f}  ({time.time()-t0:.0f}s)")
 
     with open(out_csv, "w") as f:
-        f.write("policy,task,ttft_mean_s,quality,hit_rate_dram\n")
+        f.write("policy,task,ttft_mean_s,quality,hit_rate_dram,"
+                "load_mean_s,prefill_mean_s\n")
         for r in rows:
             f.write(f"{r['policy']},{r['task']},{r['ttft_mean_s']:.6f},"
-                    f"{r['quality']:.4f},{r['hit_rate_dram']:.4f}\n")
+                    f"{r['quality']:.4f},{r['hit_rate_dram']:.4f},"
+                    f"{r['load_mean_s']:.6f},{r['prefill_mean_s']:.6f}\n")
 
     # headline: best adaptive TTFT at quality >= best fixed baseline quality
     alls = [r for r in rows if r["task"] == "ALL"]

@@ -1,0 +1,99 @@
+"""Overlap benchmark: event-driven engine vs the serialized seed loop.
+
+SSD-heavy setting (DRAM sized to hold ~2 of 6 contexts, so >=50% of
+requests hit SSD) with a warm cache and a lossless fixed policy, so BOTH
+paths see byte-identical caches, identical hit tiers, and bit-identical
+generated answers. Decode pricing is conservative for the comparison:
+the serialized loop charges each step at batch=1 (it really serves one
+request at a time), the event engine charges each tick at its true
+active-lane count (>=1, i.e. never cheaper per step) — so any TTFT gap
+comes from the scheduling, not the decode model: the seed loop blocks
+the single server behind every load, the event engine books loads on
+the shared SSD channel and keeps decoding.
+
+    PYTHONPATH=src python benchmarks/fig3_overlap.py
+
+Emits experiments/fig3_overlap.csv and prints the headline speedup.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving.baselines import build_engine
+from repro.serving.engine import summarize
+from repro.serving.runner import ModelRunner
+from repro.serving.workload import make_contexts, round_robin_requests
+
+ARCH = "adaptcache-8b"
+N_ACTIVE = 8_030_000_000
+
+
+def main(out_csv: str = "experiments/fig3_overlap.csv"):
+    cfg = get_config(ARCH, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    runner = ModelRunner(model, params, capacity=256)
+
+    rng = np.random.RandomState(7)
+    contexts = make_contexts(rng, cfg.vocab_size, 2, min_len=96, max_len=160,
+                             n_probes=2)                      # 6 contexts
+    requests = round_robin_requests(contexts, 36, 0.02, max_new_tokens=8)
+    full = get_config(ARCH)
+    prefills = {c.key: runner.prefill_entry(c.tokens) for c in contexts}
+
+    rows = []
+    stats = {}
+    for mode in ("serialized", "event"):
+        rig = build_engine(runner, contexts, full, N_ACTIVE,
+                           policy=("none", 1.0), dram_entries=2.2,
+                           ssd_entries=50.0, n_lanes=4,
+                           ssd_root=tempfile.mkdtemp(prefix=f"f3_{mode}_"))
+        rig.engine.decode_batch = 1     # serialized path: true batch size
+        # identical warm cache in both modes: insert every context once
+        for c in contexts:
+            rig.controller.insert(c.key, prefills[c.key], c.task_type,
+                                  now=0.0)
+        res = (rig.engine.process_serialized(requests) if mode == "serialized"
+               else rig.engine.process(requests))
+        s = summarize(res)
+        stats[mode] = s
+        hits = tuple((r.req_id, r.hit_tier) for r in
+                     sorted(res, key=lambda r: r.req_id))
+        rows.append((mode, s, hits))
+        print(f"{mode:10s} ttft_mean={s['ttft_mean_s']*1e3:8.1f}ms "
+              f"p90={s['ttft_p90_s']*1e3:8.1f}ms "
+              f"quality={s['quality_mean']:.3f} "
+              f"ssd_hits={s['hit_rate_ssd']:.2f} "
+              f"dram_hits={s['hit_rate_dram']:.2f}")
+
+    assert rows[0][2] == rows[1][2], "hit sequences diverged"
+    assert stats["event"]["quality_mean"] == stats["serialized"]["quality_mean"]
+    assert stats["serialized"]["hit_rate_ssd"] >= 0.5, "not SSD-heavy"
+    speedup = (stats["serialized"]["ttft_mean_s"]
+               / stats["event"]["ttft_mean_s"])
+    assert stats["event"]["ttft_mean_s"] < stats["serialized"]["ttft_mean_s"]
+    print(f"\nevent-driven mean TTFT speedup: {speedup:.2f}x at identical "
+          f"quality ({stats['event']['quality_mean']:.3f}) and hit mix "
+          f"(ssd={stats['event']['hit_rate_ssd']:.2f})")
+
+    if os.path.dirname(out_csv):
+        os.makedirs(os.path.dirname(out_csv), exist_ok=True)
+    keys = ["ttft_mean_s", "ttft_p50_s", "ttft_p90_s", "ttft_p99_s",
+            "quality_mean", "hit_rate_ssd", "hit_rate_dram", "queue_mean_s",
+            "load_mean_s", "prefill_mean_s", "decode_mean_s"]
+    with open(out_csv, "w") as f:
+        f.write("mode," + ",".join(keys) + "\n")
+        for mode, s, _ in rows:
+            f.write(mode + "," + ",".join(f"{s[k]:.6f}" for k in keys) + "\n")
+    print(f"wrote {out_csv}")
+    return stats
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,7 @@
 
   fig1_hitrate        Fig. 1 — hit-rate / load-delay / quality triangle
   fig2_ttft_quality   Fig. 2 — TTFT vs quality Pareto, 3 tasks x 9 policies
+  fig3_overlap        —      — event-driven vs serialized loop, SSD-heavy
   tab_alpha_hitrate   §3     — DRAM hit rate vs alpha sweep
   estimator_curves    §2     — offline quality-rate profiling
   kernel_bench        —      — Pallas-op microbenches (CSV contract)
@@ -26,8 +27,8 @@ def main() -> None:
 
     os.makedirs("experiments", exist_ok=True)
     from benchmarks import (estimator_curves, fig1_hitrate,
-                            fig2_ttft_quality, kernel_bench, roofline_bench,
-                            tab_alpha_hitrate)
+                            fig2_ttft_quality, fig3_overlap, kernel_bench,
+                            roofline_bench, tab_alpha_hitrate)
     suites = [
         ("kernel_bench", kernel_bench.main),
         ("roofline_bench", roofline_bench.main),
@@ -37,6 +38,7 @@ def main() -> None:
             ("estimator_curves", estimator_curves.main),
             ("fig1_hitrate", fig1_hitrate.main),
             ("fig2_ttft_quality", fig2_ttft_quality.main),
+            ("fig3_overlap", fig3_overlap.main),
             ("tab_alpha_hitrate", tab_alpha_hitrate.main),
         ]
     for name, fn in suites:

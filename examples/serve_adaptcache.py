@@ -1,6 +1,8 @@
 """End-to-end serving driver (deliverable b): trains the smoke model, fits
-the paper's offline quality estimator, then serves a Poisson workload with
-AdaptCache and prints the TTFT/quality/hit-rate summary vs two baselines.
+the paper's offline quality estimator, then serves a Poisson workload on
+the event-driven AdaptCache engine (KV loads overlap decode; two replicas
+share one cache hierarchy) and prints the TTFT/quality/hit-rate summary
+with the queue/load/prefill/decode breakdown vs two baselines.
 
     PYTHONPATH=src python examples/serve_adaptcache.py
 """
@@ -15,6 +17,7 @@ def main():
         serve.main(["--arch", "adaptcache-8b", "--policy", policy,
                     "--alpha", "0.01", "--rate", "0.5",
                     "--duration", "60", "--train-steps", "100",
+                    "--replicas", "2", "--lanes", "2",
                     "--contexts-per-task", "3"]
                    + (["--fit-estimator"] if policy == "adaptive" else []))
 

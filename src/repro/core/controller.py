@@ -1,10 +1,20 @@
 """AdaptCacheController: the facade tying estimator + policy + executor.
 
 Serving-engine contract:
-    insert(key, kv, task_type)  — store a freshly prefetched KV entry
-    fetch(key)                  — load on hit; returns (kv, delay breakdown)
-    lookup(key)                 — tier name or None
-    stats()                     — hit rates per tier, byte counters
+    insert(key, kv, task_type, now=t)  — store a freshly prefilled entry
+    fetch(key, now=t)                  — load on hit; (kv, delay breakdown)
+    lookup(key)                        — tier name or None
+    stats()                            — hit rates per tier, byte counters
+
+``now`` is the *simulated* event-loop timestamp: the event-driven engine
+passes the issue time on fetch and the completion time on insert, so
+frequency estimates (EWMA hit rates) and utility recomputation see the
+same clock the requests experience. When callers omit ``now`` the
+controller falls back to ``clock()``; serving rigs wire a shared
+``SimClock`` there (advanced by the engine as events fire), standalone
+use defaults to wall time. One controller may be shared by N engine
+replicas — all state (tiers, meta, estimators) is global to the
+hierarchy while fetch *contention* is modeled engine-side per tier.
 
 Capacity is enforced by the greedy MCKP loop: after any byte growth in a
 tier, apply minimal-marginal-utility-drop moves until all tiers fit
@@ -24,6 +34,19 @@ from repro.core.estimator import (
 from repro.core.executor import Executor
 from repro.core.policy import AdaptivePolicy, BasePolicy, Placement
 from repro.storage.tier import Tier
+
+
+class SimClock:
+    """Mutable simulated-time source shared by engine and controller."""
+
+    def __init__(self, now: float = 0.0):
+        self.now = now
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, t: float) -> None:
+        self.now = max(self.now, t)
 
 
 @dataclasses.dataclass

@@ -2,11 +2,14 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch adaptcache-8b \
         --policy adaptive --alpha 0.01 --rate 0.5 --duration 60 \
-        [--train-steps 150] [--fit-estimator]
+        [--train-steps 150] [--fit-estimator] [--replicas N] [--lanes K]
 
 Trains the smoke model on the recall task first (so compression has a
 measurable quality effect), optionally fits the paper's offline quality
-estimator, then serves a Poisson workload and prints TTFT/quality/hit-rate.
+estimator, then serves a Poisson workload on the event-driven engine
+(loads/prefills overlap decode; ``--serialized`` selects the legacy
+blocking loop) and prints the TTFT/quality/hit-rate summary with the
+queue/load/prefill/decode breakdown.
 """
 from __future__ import annotations
 
@@ -59,6 +62,12 @@ def main(argv=None) -> int:
     ap.add_argument("--fit-estimator", action="store_true")
     ap.add_argument("--dram-entries", type=float, default=3.0)
     ap.add_argument("--ssd-entries", type=float, default=12.0)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas sharing one cache hierarchy")
+    ap.add_argument("--lanes", type=int, default=2,
+                    help="continuous-batching lanes per replica")
+    ap.add_argument("--serialized", action="store_true",
+                    help="use the legacy load-blocking loop (baseline)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -82,12 +91,14 @@ def main(argv=None) -> int:
     n_active = build_model(full_cfg).active_param_count()
     rig = build_engine(runner, contexts, full_cfg, n_active, policy=policy,
                        alpha=args.alpha, dram_entries=args.dram_entries,
-                       ssd_entries=args.ssd_entries)
+                       ssd_entries=args.ssd_entries,
+                       n_replicas=args.replicas, n_lanes=args.lanes)
     if args.fit_estimator and args.policy == "adaptive":
         fit_quality_estimator(rig, contexts)
         print("quality estimator fitted")
 
-    results = rig.engine.process(requests)
+    results = (rig.engine.process_serialized(requests) if args.serialized
+               else rig.engine.process(requests))
     s = summarize(results)
     print("\n=== serving summary ===")
     for k, v in s.items():

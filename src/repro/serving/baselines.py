@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.compression import default_registry
-from repro.core.controller import AdaptCacheController
+from repro.core.controller import AdaptCacheController, SimClock
 from repro.core.estimator import (
     DEFAULT_DECOMPRESS_BPS, DelayProfile, FrequencyEstimator, QualityEstimator,
 )
@@ -39,7 +39,7 @@ class EngineRig:
     engine: ServingEngine
     controller: AdaptCacheController
     quality_est: Optional[QualityEstimator]
-    clock: list
+    clock: SimClock
 
 
 def build_engine(runner: ModelRunner, contexts: Sequence[Context],
@@ -48,7 +48,8 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
                  dram_entries: float = 4.0, ssd_entries: float = 24.0,
                  device: DeviceModel = A100,
                  quality_est: Optional[QualityEstimator] = None,
-                 ssd_root: Optional[str] = None) -> EngineRig:
+                 ssd_root: Optional[str] = None,
+                 n_replicas: int = 1, n_lanes: int = 2) -> EngineRig:
     methods = default_registry()
     smoke_cfg = runner.model.cfg
 
@@ -84,11 +85,12 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
         mname, rate = policy
         pol = FixedPolicy(methods, order, mname, rate)
 
-    clock = [0.0]
+    clock = SimClock()
     ctrl = AdaptCacheController(methods, tiers, order, pol, delay, freq,
-                                clock=lambda: clock[0])
+                                clock=clock)
     tm = TimeModel(full_cfg, device, n_active_params)
-    eng = ServingEngine(runner, ctrl, tm, contexts)
+    eng = ServingEngine(runner, ctrl, tm, contexts, n_replicas=n_replicas,
+                        n_lanes=n_lanes, sim_clock=clock)
     return EngineRig(eng, ctrl, qe, clock)
 
 

@@ -1,37 +1,54 @@
-"""ServingEngine: end-to-end AdaptCache serving loop.
+"""ServingEngine: event-driven AdaptCache serving simulator.
 
-Per request (paper Fig. 1 pipeline):
-  lookup(context) ->
-    HIT  : load entry from its tier (+ decompress)      [delay: modeled]
-           build decode cache, answer the question       [delay: modeled]
-    MISS : full prefill (recomputation)                  [delay: modeled]
-           insert the fresh entry into the hierarchy
-  TTFT = queue wait + (load+decompress | prefill) + one decode step.
+The engine runs the paper's Fig. 1 pipeline as a discrete-event
+simulation instead of a serialized request loop:
 
-Compute happens for real on the smoke model (greedy decode, per-request);
-TIME is accounted with the calibrated full-scale model (timemodel.py) so
-TTFT numbers correspond to the paper's A100 + Llama-3.1-8B setting.
-Quality per the paper: similarity (task metric) of the answer generated
-from the compressed entry vs the answer from uncompressed prefill.
+  arrival      -> request lands on the least-loaded replica; a free lane
+                  is reserved and the KV fetch / prefill is ISSUED
+  load-done    -> hit path: the entry's bytes were booked on the shared
+                  per-tier IOChannel (DRAM: many streams, SSD: one at
+                  1 GB/s — replicas contend) + decompress delay; the lane
+                  joins the replica's continuous batch only now
+  prefill-done -> miss path: recompute booked on the replica's prefill
+                  stream (prefills queue behind each other, never behind
+                  decode); concurrent misses on one context coalesce onto
+                  a single in-flight prefill; the fresh entry is inserted
+                  into the hierarchy at completion time
+  decode-tick  -> ALL active lanes of a replica decode one step in one
+                  batched model call; ticks keep firing while loads are
+                  in flight — decode never stalls on I/O
 
-A slot-based continuous-batching scheduler (scheduler.py) orders request
-admission; decode batching across requests is simulated time-wise (batch
-size feeds decode_step_s) while token generation runs per-request for
-bit-exact quality attribution.
+TTFT decomposes into queue (lane wait) + load|prefill (I/O / compute
+queueing included) + decode (teacher-forced question steps), reported
+per request in ``RequestResult``. Simulated time comes from the
+calibrated full-scale ``TimeModel``; token content is computed for real
+on the smoke model (batched lane decode is bit-exact vs the sequential
+path), so quality attribution is exact. The controller's clock is the
+event clock: ``fetch`` sees issue time, ``insert`` sees completion time.
+
+``process_serialized`` preserves the seed's one-request-at-a-time loop
+(every load blocks the server) as the measured baseline the event engine
+is judged against; see ``benchmarks/fig3_overlap.py``.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.controller import AdaptCacheController
-from repro.serving.metrics import quality_score
+from repro.core.controller import AdaptCacheController, SimClock
+from repro.serving.metrics import percentile_summary, quality_score
 from repro.serving.runner import ModelRunner
-from repro.serving.timemodel import TimeModel
+from repro.serving.scheduler import (
+    EV_ARRIVAL, EV_LOAD_DONE, EV_PREFILL_DONE, EV_TICK, EVENT_NAMES,
+    ContinuousBatcher, EventLoop, LaneSet,
+)
+from repro.serving.timemodel import ComputeChannel, IOChannel, TimeModel
 from repro.serving.workload import Context, Request
+
+DEFAULT_IO_STREAMS = {"dram": 8, "ssd": 1}
 
 
 @dataclasses.dataclass
@@ -49,19 +66,43 @@ class RequestResult:
     rate: float
     quality: float
     answer: List[int]
+    decode_s: float = 0.0            # ttft - queue - load - prefill
+    finish_s: float = 0.0            # last answer token time
+    replica: int = 0
+
+
+class _Replica(LaneSet):
+    """One engine replica: lane bookkeeping + a private prefill stream."""
+
+    def __init__(self, idx: int, batcher: ContinuousBatcher):
+        super().__init__(batcher)
+        self.idx = idx
+        self.prefill_chan = ComputeChannel(f"prefill{idx}")
 
 
 class ServingEngine:
     def __init__(self, runner: ModelRunner, controller: AdaptCacheController,
                  time_model: TimeModel, contexts: Sequence[Context],
-                 max_new_tokens: int = 24, decode_batch: int = 8):
+                 max_new_tokens: int = 24, decode_batch: int = 8,
+                 n_replicas: int = 1, n_lanes: int = 2,
+                 io_streams: Optional[Dict[str, int]] = None,
+                 sim_clock: Optional[SimClock] = None):
+        if n_replicas < 1 or n_lanes < 1:
+            raise ValueError("need at least one replica with one lane")
         self.runner = runner
         self.controller = controller
         self.tm = time_model
         self.contexts: Dict[str, Context] = {c.key: c for c in contexts}
         self.max_new = max_new_tokens
         self.decode_batch = decode_batch
+        self.n_replicas = n_replicas
+        self.n_lanes = n_lanes
+        self.io_streams = dict(DEFAULT_IO_STREAMS if io_streams is None
+                               else io_streams)
+        self.sim_clock = sim_clock
         self._ref_cache: Dict[str, List[int]] = {}
+        self._prefill_cache: Dict[str, Any] = {}
+        self.last_trace: List[Tuple[float, str, Dict[str, Any]]] = []
 
     # -- reference answers (uncompressed prefill), cached -----------------------
     def _probe_key(self, ctx_key: str, question: np.ndarray,
@@ -79,9 +120,154 @@ class ServingEngine:
             self._ref_cache[pk] = ans
         return self._ref_cache[pk]
 
-    # -- serving loop -------------------------------------------------------------
+    def _prefill_kv(self, ctx: Context):
+        """Real-compute prefill, memoized per context (deterministic)."""
+        if ctx.key not in self._prefill_cache:
+            self._prefill_cache[ctx.key] = self.runner.prefill_entry(
+                ctx.tokens)
+        return self._prefill_cache[ctx.key]
+
+    def _score(self, req: Request, ctx: Context, answer: List[int],
+               skip_quality: bool) -> float:
+        if skip_quality:
+            return 1.0
+        ref = self.reference_answer(ctx, req.question, req.max_new_tokens)
+        return quality_score(ctx.task_type, answer, ref)
+
+    # -- event-driven serving loop ----------------------------------------------
     def process(self, requests: Sequence[Request],
                 skip_quality: bool = False) -> List[RequestResult]:
+        """Simulate the full request stream on N replicas; returns one
+        RequestResult per request with the queue/load/prefill/decode
+        breakdown. Loads and prefills overlap decode (see module doc)."""
+        loop = EventLoop()
+        trace = self.last_trace = []
+        channels = {
+            name: IOChannel(name, tier.spec.read_bw, tier.spec.latency_s,
+                            self.io_streams.get(name, 1))
+            for name, tier in self.controller.tiers.items()}
+        replicas = [
+            _Replica(i, ContinuousBatcher(self.runner.model,
+                                          self.runner.params, self.tm,
+                                          n_slots=self.n_lanes,
+                                          capacity=self.runner.capacity))
+            for i in range(self.n_replicas)]
+        # per-request breakdown records, filled at admission
+        pending: Dict[int, Dict[str, Any]] = {}
+        # coalesced in-flight prefills: ctx_key -> (kv, done_time)
+        inflight: Dict[str, Tuple[Any, float]] = {}
+        results: List[RequestResult] = []
+
+        def note(now: float, kind: str, **info) -> None:
+            trace.append((now, kind, info))
+
+        def tick_time(now: float) -> None:
+            if self.sim_clock is not None:
+                self.sim_clock.advance(now)
+
+        def dispatch(rep: _Replica, lane: int, req: Request,
+                     now: float) -> None:
+            ctx = self.contexts[req.context_key]
+            fetched = self.controller.fetch(req.context_key, now=now)
+            if fetched is not None:
+                io_done = channels[fetched.tier].submit(now, fetched.nbytes)
+                done = io_done + fetched.decompress_delay_s
+                note(now, "load_issue", req_id=req.req_id,
+                     tier=fetched.tier, nbytes=fetched.nbytes,
+                     replica=rep.idx, done=done)
+                loop.push(done, EV_LOAD_DONE,
+                          (rep, lane, req, fetched.kv, len(ctx.tokens),
+                           now, {"hit_tier": fetched.tier,
+                                 "method": fetched.method,
+                                 "rate": fetched.rate}))
+            elif req.context_key in inflight:
+                kv, done = inflight[req.context_key]
+                done = max(done, now)
+                note(now, "prefill_coalesce", req_id=req.req_id,
+                     replica=rep.idx, done=done)
+                loop.push(done, EV_PREFILL_DONE,
+                          (rep, lane, req, kv, len(ctx.tokens), now, None))
+            else:
+                kv = self._prefill_kv(ctx)
+                done = rep.prefill_chan.submit(
+                    now, self.tm.prefill_s(len(ctx.tokens)))
+                inflight[req.context_key] = (kv, done)
+                note(now, "prefill_issue", req_id=req.req_id,
+                     replica=rep.idx, done=done)
+                loop.push(done, EV_PREFILL_DONE,
+                          (rep, lane, req, kv, len(ctx.tokens), now,
+                           ctx.task_type))
+
+        def issue(rep: _Replica, now: float) -> None:
+            rep.issue(now, lambda lane, req, t: dispatch(rep, lane, req, t))
+
+        req_by_id = {r.req_id: r for r in requests}
+        for req in requests:
+            loop.push(req.arrival_s, EV_ARRIVAL, req)
+
+        while loop:
+            now, kind, payload = loop.pop()
+            tick_time(now)
+            if kind == EV_ARRIVAL:
+                req = payload
+                rep = min(replicas, key=lambda r: (r.occupancy(), r.idx))
+                rep.waiting.append(req)
+                note(now, "arrival", req_id=req.req_id, replica=rep.idx)
+                issue(rep, now)
+
+            elif kind in (EV_LOAD_DONE, EV_PREFILL_DONE):
+                rep, lane, req, kv, orig_len, issue_t, extra = payload
+                if kind == EV_PREFILL_DONE:
+                    if isinstance(extra, str):       # owner of the prefill
+                        self.controller.insert(req.context_key, kv, extra,
+                                               now=now)
+                        inflight.pop(req.context_key, None)
+                    hit = {"hit_tier": None, "method": "none", "rate": 1.0}
+                    delays = {"load_s": 0.0, "prefill_s": now - issue_t}
+                else:
+                    hit = extra
+                    delays = {"load_s": now - issue_t, "prefill_s": 0.0}
+                rep.admit(lane, req, kv, orig_len, now)
+                pending[req.req_id] = {
+                    "queue_s": issue_t - req.arrival_s, **delays, **hit,
+                    "replica": rep.idx}
+                note(now, EVENT_NAMES[kind], req_id=req.req_id,
+                     replica=rep.idx, lane=lane)
+                rep.ensure_tick(loop, now)
+
+            elif kind == EV_TICK:
+                rep = payload
+                done = rep.tick(loop, now)
+                if done is None:            # all lanes idle; chain stopped
+                    continue
+                note(now, "tick", replica=rep.idx, finished=len(done),
+                     lanes=sum(s.active for s in rep.batcher.slots)
+                     + len(done))
+                for sched in done:
+                    rec = pending.pop(sched.req_id)
+                    req = req_by_id[sched.req_id]
+                    ctx = self.contexts[sched.context_key]
+                    non_decode = (rec["queue_s"] + rec["load_s"]
+                                  + rec["prefill_s"])
+                    results.append(RequestResult(
+                        sched.req_id, sched.context_key, ctx.task_type,
+                        req.arrival_s, sched.ttft_s, rec["queue_s"],
+                        rec["load_s"], rec["prefill_s"], rec["hit_tier"],
+                        rec["method"], rec["rate"],
+                        self._score(req, ctx, sched.tokens, skip_quality),
+                        sched.tokens,
+                        decode_s=sched.ttft_s - non_decode,
+                        finish_s=sched.finish_s, replica=rec["replica"]))
+                issue(rep, now)
+
+        results.sort(key=lambda r: (r.arrival_s, r.req_id))
+        return results
+
+    # -- serialized reference loop (the seed behaviour) -------------------------
+    def process_serialized(self, requests: Sequence[Request],
+                           skip_quality: bool = False) -> List[RequestResult]:
+        """Seed serving loop kept as the measured baseline: one server,
+        every load/prefill blocks the clock before the next admission."""
         results = []
         server_free_at = 0.0
         for req in sorted(requests, key=lambda r: r.arrival_s):
@@ -93,41 +279,34 @@ class ServingEngine:
             t = len(ctx.tokens)
             if fetched is None:
                 # MISS: prefill (recomputation) and admit into the hierarchy
-                kv = self.runner.prefill_entry(ctx.tokens)
+                kv = self._prefill_kv(ctx)
                 prefill_s = self.tm.prefill_s(t)
                 load_s = 0.0
                 self.controller.insert(req.context_key, kv, ctx.task_type,
                                        now=start)
                 method, rate, tier = "none", 1.0, None
-                answer = self.runner.generate_from_kvdata(
-                    kv, t, req.question, req.max_new_tokens)
             else:
                 kv = fetched.kv
                 load_s = fetched.total_delay_s
                 prefill_s = 0.0
                 method, rate, tier = (fetched.method, fetched.rate,
                                       fetched.tier)
-                answer = self.runner.generate_from_kvdata(
-                    kv, t, req.question, req.max_new_tokens)
+            answer = self.runner.generate_from_kvdata(
+                kv, t, req.question, req.max_new_tokens)
 
             decode1 = self.tm.decode_step_s(self.decode_batch, t)
             # question tokens are teacher-forced decode steps before TTFT
-            ttft = queue_s + load_s + prefill_s \
-                + decode1 * (len(req.question) + 1)
-            server_free_at = start + load_s + prefill_s \
+            decode_s = decode1 * (len(req.question) + 1)
+            ttft = queue_s + load_s + prefill_s + decode_s
+            finish = start + load_s + prefill_s \
                 + decode1 * (len(req.question) + req.max_new_tokens)
+            server_free_at = finish
 
-            if skip_quality:
-                q = 1.0
-            else:
-                # reference must match the request's generation budget
-                ref = self.reference_answer(ctx, req.question,
-                                            req.max_new_tokens)
-                q = quality_score(ctx.task_type, answer, ref)
             results.append(RequestResult(
                 req.req_id, req.context_key, ctx.task_type, req.arrival_s,
-                ttft, queue_s, load_s, prefill_s, tier, method, rate, q,
-                answer))
+                ttft, queue_s, load_s, prefill_s, tier, method, rate,
+                self._score(req, ctx, answer, skip_quality), answer,
+                decode_s=decode_s, finish_s=finish))
         return results
 
     # -- estimator probe --------------------------------------------------------
@@ -147,17 +326,22 @@ class ServingEngine:
 
 
 def summarize(results: Sequence[RequestResult]) -> Dict[str, float]:
+    if not results:
+        return {"n": 0}
     ttfts = np.array([r.ttft_s for r in results])
     quals = np.array([r.quality for r in results])
     hits = [r for r in results if r.hit_tier is not None]
+    n = len(results)
     out = {
-        "n": len(results),
-        "ttft_mean_s": float(ttfts.mean()),
-        "ttft_p50_s": float(np.percentile(ttfts, 50)),
-        "ttft_p90_s": float(np.percentile(ttfts, 90)),
+        "n": n,
+        **percentile_summary("ttft", ttfts),
         "quality_mean": float(quals.mean()),
-        "hit_rate": len(hits) / max(1, len(results)),
-        "hit_rate_dram": sum(r.hit_tier == "dram" for r in results) / max(1, len(results)),
-        "hit_rate_ssd": sum(r.hit_tier == "ssd" for r in results) / max(1, len(results)),
+        "hit_rate": len(hits) / n,
+        "hit_rate_dram": sum(r.hit_tier == "dram" for r in results) / n,
+        "hit_rate_ssd": sum(r.hit_tier == "ssd" for r in results) / n,
+        "queue_mean_s": float(np.mean([r.queue_s for r in results])),
+        "load_mean_s": float(np.mean([r.load_s for r in results])),
+        "prefill_mean_s": float(np.mean([r.prefill_s for r in results])),
+        "decode_mean_s": float(np.mean([r.decode_s for r in results])),
     }
     return out

@@ -1,15 +1,33 @@
 """Generation-quality metrics (paper footnote 1: similarity between the
-generated answer after compression and the original prefill answer).
+generated answer after compression and the original prefill answer),
+plus the latency-distribution helper shared by serving summaries.
 
 token_f1   — unigram F1 (the QA metric family)
 rouge_l    — LCS-based F-measure (summarization)
 codebleu_proxy — weighted n-gram overlap (coding; full CodeBLEU needs ASTs,
                  we use its n-gram core as the proxy at token level)
+percentile_summary — mean/p50/p90/p99 of a latency sample under stable
+                 key names ("<prefix>_mean_s", ...)
 """
 from __future__ import annotations
 
 import collections
-from typing import List, Sequence
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+def percentile_summary(prefix: str, values: Sequence[float]
+                       ) -> Dict[str, float]:
+    arr = np.asarray(list(values), dtype=np.float64)
+    if arr.size == 0:
+        return {f"{prefix}_mean_s": 0.0}
+    return {
+        f"{prefix}_mean_s": float(arr.mean()),
+        f"{prefix}_p50_s": float(np.percentile(arr, 50)),
+        f"{prefix}_p90_s": float(np.percentile(arr, 90)),
+        f"{prefix}_p99_s": float(np.percentile(arr, 99)),
+    }
 
 
 def token_f1(pred: Sequence[int], ref: Sequence[int]) -> float:

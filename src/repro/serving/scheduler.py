@@ -1,20 +1,34 @@
-"""Slot-based continuous batching over the ragged decode path.
+"""Continuous-batching lanes + the discrete-event loop they run under.
 
-One BATCHED cache pytree holds ``n_slots`` lanes; requests are admitted
-into free lanes (prefill or cache-hit load writes the lane), every tick
-decodes ALL active lanes in one model call with per-lane write slots and
-RoPE positions (`decode_step(cur_index=(B,), position=(B,))` — the vector
-form added for exactly this), finished lanes free immediately and new
-requests stream in: no batch-boundary stalls (continuous batching).
+Two layers live here:
 
-Simulated time uses the full-scale model (`timemodel`) so TTFT/throughput
-numbers correspond to the production device, while the token content is
-computed for real on the smoke model.
+* ``ContinuousBatcher`` — slot-based continuous batching over the ragged
+  decode path. One BATCHED cache pytree holds ``n_slots`` lanes; requests
+  are admitted into free lanes (prefill or cache-hit load writes the
+  lane), every tick decodes ALL active lanes in one model call with
+  per-lane write slots and RoPE positions (`decode_step(cur_index=(B,),
+  position=(B,))` — the vector form added for exactly this), finished
+  lanes free immediately and new requests stream in: no batch-boundary
+  stalls. Token content is computed for real on the smoke model while
+  simulated time uses the full-scale ``timemodel``.
+
+* ``EventLoop`` — a priority event queue (arrival / load-complete /
+  prefill-complete / decode-tick) with a monotonic simulated clock and a
+  zero-progress livelock guard. KV loads and prefills are *booked* on
+  I/O / compute channels and complete asynchronously, so decode ticks
+  never stall on storage: a lane joins the batch only when its
+  load-complete event fires. ``repro.serving.engine.ServingEngine`` is
+  the full AdaptCache front end on top of this; ``run_continuous`` below
+  is the thin single-batcher harness used by the scheduler tests.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+import heapq
+import itertools
+import weakref
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +66,24 @@ class ScheduledResult:
     tokens: List[int]
 
 
+_DECODE_CACHE: Dict[int, Tuple[Any, Any]] = {}   # id(model) -> (ref, fn)
+
+
+def _shared_decode(model: Model):
+    """One jitted decode_step per model instance: batchers are rebuilt per
+    engine run, so sharing the jit wrapper avoids re-tracing every time.
+    Model is a frozen dataclass, so the cache lives here, keyed by id with
+    a weakref liveness check (a recycled id just re-jits)."""
+    ent = _DECODE_CACHE.get(id(model))
+    if ent is not None and ent[0]() is model:
+        return ent[1]
+    for k in [k for k, (r, _) in _DECODE_CACHE.items() if r() is None]:
+        del _DECODE_CACHE[k]                     # drop dead entries
+    fn = jax.jit(model.decode_step)
+    _DECODE_CACHE[id(model)] = (weakref.ref(model), fn)
+    return fn
+
+
 class ContinuousBatcher:
     def __init__(self, model: Model, params, time_model: TimeModel,
                  n_slots: int = 4, capacity: int = 1024):
@@ -62,7 +94,7 @@ class ContinuousBatcher:
         self.capacity = capacity
         self.cache = model.init_cache(batch=n_slots, capacity=capacity)
         self.slots = [SlotState() for _ in range(n_slots)]
-        self._decode = jax.jit(model.decode_step)
+        self._decode = _shared_decode(model)
 
     # -- lane loading ---------------------------------------------------------
     def _write_lane(self, lane: int, kv: KVData) -> int:
@@ -161,33 +193,152 @@ class ContinuousBatcher:
         return done, dt
 
 
+# ---------------------------------------------------------------------------
+# Discrete-event core
+# ---------------------------------------------------------------------------
+
+# Event kinds, in tie-break priority order at equal timestamps: completions
+# land before arrivals so a lane freed at t can absorb a request arriving
+# at t, and ticks run last so they see every admission made "at" t.
+EV_LOAD_DONE = 0
+EV_PREFILL_DONE = 1
+EV_ARRIVAL = 2
+EV_TICK = 3
+
+EVENT_NAMES = {EV_LOAD_DONE: "load_done", EV_PREFILL_DONE: "prefill_done",
+               EV_ARRIVAL: "arrival", EV_TICK: "tick"}
+
+
+class EventLoop:
+    """Priority queue of timestamped events with a monotonic sim clock.
+
+    The clock never moves backwards: an event scheduled in the past (e.g.
+    an arrival timestamped before the current clock) is processed *at*
+    the current clock. ``max_events`` is the zero-progress livelock guard
+    — the seed ``run_continuous`` could spin forever re-reading a past
+    arrival without advancing time; here any handler that keeps
+    scheduling same-time work trips the guard with a clear error instead
+    of hanging the process.
+    """
+
+    def __init__(self, max_events: int = 2_000_000):
+        self._heap: List[Tuple[float, int, int, Any]] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+        self.max_events = max_events
+        self.processed = 0
+
+    def push(self, when: float, kind: int, payload: Any = None) -> None:
+        heapq.heappush(self._heap, (when, kind, next(self._seq), payload))
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def pop(self) -> Tuple[float, int, Any]:
+        when, kind, _, payload = heapq.heappop(self._heap)
+        self.now = max(self.now, when)      # monotonic sim clock
+        self.processed += 1
+        if self.processed > self.max_events:
+            raise RuntimeError(
+                f"event loop exceeded {self.max_events} events at "
+                f"t={self.now:.3f} — zero-progress livelock?")
+        return self.now, kind, payload
+
+
+class LaneSet:
+    """Lane bookkeeping shared by the engine's replicas and the
+    ``run_continuous`` harness: requests waiting for a lane, lanes
+    reserved by in-flight loads, and the single decode-tick chain per
+    batcher (with the zero-progress guard)."""
+
+    def __init__(self, batcher: ContinuousBatcher):
+        if batcher.n_slots < 1:
+            raise ValueError("need at least one lane")
+        self.batcher = batcher
+        self.waiting: collections.deque = collections.deque()
+        self.reserved: set = set()
+        self._tick_scheduled = False
+
+    def free_lanes(self) -> List[int]:
+        return [i for i in self.batcher.free_lanes()
+                if i not in self.reserved]
+
+    def occupancy(self) -> int:
+        return (len(self.waiting) + len(self.reserved)
+                + sum(s.active for s in self.batcher.slots))
+
+    def admit(self, lane: int, req: Request, kv: KVData, orig_len: int,
+              now: float) -> None:
+        self.reserved.discard(lane)
+        self.batcher.admit(lane, req, kv, orig_len, now)
+
+    def issue(self, now: float,
+              dispatch: Callable[[int, Request, float], None]) -> None:
+        """Reserve free lanes for waiting requests in FIFO order;
+        ``dispatch(lane, req, now)`` books the load/prefill and schedules
+        the completion event that will ``admit`` into the lane."""
+        free = self.free_lanes()
+        while free and self.waiting:
+            lane, req = free.pop(0), self.waiting.popleft()
+            self.reserved.add(lane)
+            dispatch(lane, req, now)
+
+    def ensure_tick(self, loop: EventLoop, now: float) -> None:
+        if not self._tick_scheduled:
+            self._tick_scheduled = True
+            loop.push(now, EV_TICK, self)
+
+    def tick(self, loop: EventLoop, now: float
+             ) -> Optional[List[ScheduledResult]]:
+        """Run one guarded decode tick and chain the next one. Returns
+        the finished results, or None when all lanes are idle (the chain
+        stops until the next admission re-arms it)."""
+        if not any(s.active for s in self.batcher.slots):
+            self._tick_scheduled = False
+            return None
+        done, dt = self.batcher.tick(now)
+        if dt <= 0.0:
+            raise RuntimeError("decode tick made no time progress")
+        loop.push(now + dt, EV_TICK, self)
+        return done
+
+
 def run_continuous(batcher: ContinuousBatcher, requests: Sequence[Request],
                    load_fn: Callable[[Request, float], Tuple[KVData, int,
                                                              float]],
                    ) -> List[ScheduledResult]:
-    """Event loop: admit into free lanes as requests arrive, tick decode.
+    """Single-batcher event harness: loads overlap decode.
 
     load_fn(req, now) -> (kv entry for the context, original token length,
-    load/prefill delay seconds) — the AdaptCache lookup/prefill path.
+    load/prefill delay seconds) — the AdaptCache lookup/prefill path. The
+    load is *issued* when a lane frees up and completes ``load_s`` later;
+    decode ticks keep running for already-admitted lanes in the meantime
+    (the seed version advanced the global clock by ``load_s``, stalling
+    every active lane behind each fetch, and could livelock when idle
+    with a past arrival).
     """
-    queue = sorted(requests, key=lambda r: r.arrival_s)
-    clock = 0.0
+    loop = EventLoop()
+    lanes = LaneSet(batcher)
     results: List[ScheduledResult] = []
-    qi = 0
-    while qi < len(queue) or any(s.active for s in batcher.slots):
-        # admit
-        for lane in batcher.free_lanes():
-            if qi >= len(queue) or queue[qi].arrival_s > clock:
-                break
-            req = queue[qi]
-            qi += 1
-            kv, orig_len, load_s = load_fn(req, clock)
-            clock += load_s
-            batcher.admit(lane, req, kv, orig_len, clock)
-        done, dt = batcher.tick(clock)
-        if dt == 0.0:
-            clock = queue[qi].arrival_s if qi < len(queue) else clock
-            continue
-        clock += dt
-        results.extend(done)
+    for req in requests:
+        loop.push(req.arrival_s, EV_ARRIVAL, req)
+
+    def dispatch(lane: int, req: Request, now: float) -> None:
+        kv, orig_len, load_s = load_fn(req, now)
+        loop.push(now + load_s, EV_LOAD_DONE, (lane, req, kv, orig_len))
+
+    while loop:
+        now, kind, payload = loop.pop()
+        if kind == EV_ARRIVAL:
+            lanes.waiting.append(payload)
+            lanes.issue(now, dispatch)
+        elif kind == EV_LOAD_DONE:
+            lane, req, kv, orig_len = payload
+            lanes.admit(lane, req, kv, orig_len, now)
+            lanes.ensure_tick(loop, now)
+        elif kind == EV_TICK:
+            done = lanes.tick(loop, now)
+            if done is not None:
+                results.extend(done)
+                lanes.issue(now, dispatch)  # freed lanes take new loads
     return results

@@ -7,10 +7,18 @@ v5e constants available for the dry-run configs).
 
     prefill_s(T)  = 2 * N_active * T / (peak_flops * mfu)
     decode_step_s(B, T_ctx) = max(flops-bound, HBM-bound KV+weight reads)
+
+``IOChannel`` adds the per-tier I/O *service* model used by the
+event-driven engine: each storage device exposes a fixed number of
+parallel streams at a fixed bandwidth, and loads queue FIFO behind the
+earliest-free stream. DRAM exposes many streams (concurrent loads are
+near-free), an SSD exposes one (loads serialize at 1 GB/s) — this is
+what makes overlapping loads against decode worth measuring.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import List
 
 from repro.configs.base import ModelConfig
 
@@ -48,3 +56,54 @@ class TimeModel:
         bytes_rd = 2.0 * self.n_active_params + batch * ctx_tokens * kvb
         t_mem = bytes_rd / self.device.hbm_bw
         return max(t_flops, t_mem)
+
+
+# ---------------------------------------------------------------------------
+# I/O service model (event-driven engine)
+# ---------------------------------------------------------------------------
+
+class IOChannel:
+    """FIFO bandwidth queue for one storage device.
+
+    ``submit(now, nbytes)`` books a transfer onto the earliest-free of
+    ``concurrency`` parallel streams and returns its completion time; a
+    stream busy past ``now`` queues the transfer behind the in-flight one.
+    Shared across engine replicas, so replicas contend for the same SSD.
+    """
+
+    def __init__(self, name: str, bandwidth_bps: float, latency_s: float,
+                 concurrency: int = 1):
+        if concurrency < 1:
+            raise ValueError("IOChannel needs at least one stream")
+        self.name = name
+        self.bandwidth_bps = bandwidth_bps
+        self.latency_s = latency_s
+        self._free_at: List[float] = [0.0] * concurrency
+        self.busy_s = 0.0               # total occupied stream-seconds
+
+    def submit(self, now: float, nbytes: int) -> float:
+        i = min(range(len(self._free_at)), key=self._free_at.__getitem__)
+        start = max(now, self._free_at[i])
+        xfer = self.latency_s + nbytes / self.bandwidth_bps
+        self._free_at[i] = start + xfer
+        self.busy_s += xfer
+        return start + xfer
+
+    def queue_depth(self, now: float) -> int:
+        return sum(1 for t in self._free_at if t > now)
+
+
+class ComputeChannel:
+    """Single-stream FIFO for a replica's prefill compute: prefills queue
+    behind each other but never behind decode (chunked-prefill style)."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._free_at = 0.0
+        self.busy_s = 0.0
+
+    def submit(self, now: float, service_s: float) -> float:
+        start = max(now, self._free_at)
+        self._free_at = start + service_s
+        self.busy_s += service_s
+        return self._free_at

@@ -96,6 +96,22 @@ def make_contexts(rng: np.random.RandomState, vocab: int, n_per_task: int,
     return out
 
 
+def round_robin_requests(contexts: List[Context], n_requests: int,
+                         interarrival_s: float, max_new_tokens: int = 24,
+                         start_s: float = 0.0) -> List[Request]:
+    """Deterministic workload: fixed inter-arrival gap, contexts visited
+    round-robin, probes cycled per context. No RNG — identical inputs
+    give an identical request stream, which the event-engine determinism
+    tests and the overlap benchmark rely on."""
+    reqs = []
+    for i in range(n_requests):
+        ctx = contexts[i % len(contexts)]
+        q = ctx.probes[(i // len(contexts)) % len(ctx.probes)]
+        reqs.append(Request(i, ctx.key, q, start_s + i * interarrival_s,
+                            ctx.task_type, max_new_tokens))
+    return reqs
+
+
 def poisson_requests(rng: np.random.RandomState, contexts: List[Context],
                      rate_hz: float, duration_s: float,
                      zipf_a: float = 1.2, max_new_tokens: int = 24,

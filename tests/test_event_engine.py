@@ -1,0 +1,203 @@
+"""Event-driven serving engine: overlap, determinism, conservation,
+livelock guards, and the summarize contract."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.compression import default_registry
+from repro.core.compression.base import kv_nbytes
+from repro.core.controller import AdaptCacheController, SimClock
+from repro.core.estimator import (
+    DEFAULT_DECOMPRESS_BPS, DelayProfile, FrequencyEstimator,
+)
+from repro.core.policy import FixedPolicy
+from repro.models import build_model
+from repro.serving.baselines import build_engine
+from repro.serving.engine import RequestResult, ServingEngine, summarize
+from repro.serving.runner import ModelRunner
+from repro.serving.scheduler import EV_TICK, EventLoop, run_continuous
+from repro.serving.scheduler import ContinuousBatcher
+from repro.serving.timemodel import A100, IOChannel, TimeModel
+from repro.serving.workload import (
+    Request, make_contexts, round_robin_requests,
+)
+
+FULL = "adaptcache-8b"
+N_ACTIVE = 8_030_000_000
+
+
+@pytest.fixture(scope="module")
+def runner():
+    cfg = get_config(FULL, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return ModelRunner(model, params, capacity=256)
+
+
+@pytest.fixture(scope="module")
+def contexts(runner):
+    rng = np.random.RandomState(2)
+    return make_contexts(rng, runner.model.cfg.vocab_size, 2, min_len=64,
+                         max_len=96, n_probes=2)
+
+
+def _manual_engine(runner, contexts, tmp, ssd_load_s=0.05, dram_entries=1,
+                   **engine_kw):
+    """Controller with a DRAM tier sized for ``dram_entries`` entries and a
+    slow SSD whose per-entry load takes ~``ssd_load_s`` of simulated time."""
+    from repro.storage.tier import DRAMTier, DeviceSpec, SSDTier
+    kv = runner.prefill_entry(contexts[0].tokens)
+    nb = kv_nbytes(kv)
+    methods = default_registry()
+    tiers = {"dram": DRAMTier(DeviceSpec("dram", int(nb * 1.5 * dram_entries),
+                                         16e9, 16e9, 1e-6)),
+             "ssd": SSDTier(DeviceSpec("ssd", nb * 100, nb / ssd_load_s,
+                                       nb / ssd_load_s, 1e-5), root=tmp)}
+    clock = SimClock()
+    ctrl = AdaptCacheController(
+        methods, tiers, ["dram", "ssd"],
+        FixedPolicy(methods, ["dram", "ssd"], "none", 1.0),
+        DelayProfile(dict(DEFAULT_DECOMPRESS_BPS)), FrequencyEstimator(),
+        clock=clock)
+    tm = TimeModel(get_config(FULL), A100, N_ACTIVE)
+    eng = ServingEngine(runner, ctrl, tm, contexts, sim_clock=clock,
+                        **engine_kw)
+    return eng, ctrl
+
+
+def test_decode_overlaps_ssd_load(runner, contexts, tmp_path):
+    """Decode ticks must fire while an SSD load is in flight (the whole
+    point of the event engine): the trace shows a tick strictly inside
+    some [load_issue(ssd), load_done] window."""
+    eng, ctrl = _manual_engine(runner, contexts, str(tmp_path),
+                               ssd_load_s=0.08, n_lanes=2)
+    # warm: two contexts; DRAM fits one -> the LRU one is demoted to SSD
+    for c in contexts[:2]:
+        ctrl.insert(c.key, runner.prefill_entry(c.tokens), c.task_type,
+                    now=0.0)
+    assert {ctrl.lookup(contexts[0].key), ctrl.lookup(contexts[1].key)} == \
+        {"dram", "ssd"}
+    ssd_key = next(c.key for c in contexts[:2] if ctrl.lookup(c.key) == "ssd")
+    dram_key = next(c.key for c in contexts[:2]
+                    if ctrl.lookup(c.key) == "dram")
+    by_key = {c.key: c for c in contexts}
+    reqs = [  # DRAM hit decodes while the SSD fetch is in flight
+        Request(0, dram_key, by_key[dram_key].probes[0], 0.0, "qa", 12),
+        Request(1, ssd_key, by_key[ssd_key].probes[0], 0.0, "qa", 12),
+    ]
+    res = eng.process(reqs, skip_quality=True)
+    assert len(res) == 2
+    windows = [(t, i["done"]) for t, k, i in eng.last_trace
+               if k == "load_issue" and i["tier"] == "ssd"]
+    assert windows, "no SSD load issued"
+    ticks = [t for t, k, _ in eng.last_trace if k == "tick"]
+    t0, t1 = windows[0]
+    assert any(t0 < t < t1 for t in ticks), \
+        f"no decode tick inside SSD load window ({t0:.4f}, {t1:.4f})"
+    # and the SSD request's TTFT includes the load but not a serialized wait
+    ssd_res = next(r for r in res if r.req_id == 1)
+    assert ssd_res.hit_tier == "ssd"
+    assert ssd_res.load_s >= 0.08
+
+
+def test_ttft_deterministic_across_runs(runner, contexts, tmp_path):
+    full = get_config(FULL)
+    reqs = round_robin_requests(contexts, 10, 0.015, max_new_tokens=6)
+    outs = []
+    for run in range(2):
+        rig = build_engine(runner, contexts, full, N_ACTIVE,
+                           policy=("none", 1.0), dram_entries=1.5,
+                           ssd_entries=8.0,
+                           ssd_root=str(tmp_path / f"r{run}"))
+        res = rig.engine.process(reqs, skip_quality=True)
+        outs.append([(r.req_id, r.ttft_s, r.finish_s, tuple(r.answer),
+                      r.hit_tier) for r in res])
+    assert outs[0] == outs[1]
+
+
+def test_multi_replica_conserves_requests(runner, contexts, tmp_path):
+    eng, ctrl = _manual_engine(runner, contexts, str(tmp_path),
+                               n_replicas=3, n_lanes=1, dram_entries=50)
+    reqs = round_robin_requests(contexts, 9, 0.001, max_new_tokens=4)
+    res = eng.process(reqs, skip_quality=True)
+    assert sorted(r.req_id for r in res) == list(range(9))   # exactly once
+    assert {r.replica for r in res} == {0, 1, 2}   # all replicas used
+    for r in res:
+        assert r.finish_s >= r.arrival_s + r.ttft_s - 1e-9
+        assert r.ttft_s > 0
+
+
+def test_shared_hierarchy_across_replicas(runner, contexts, tmp_path):
+    """Replica 1's miss populates the cache replica 0 then hits."""
+    eng, ctrl = _manual_engine(runner, contexts, str(tmp_path),
+                               n_replicas=2, n_lanes=1, dram_entries=50)
+    ctx = contexts[0]
+    reqs = [Request(i, ctx.key, ctx.probes[0], 0.4 * i, ctx.task_type, 4)
+            for i in range(4)]
+    res = eng.process(reqs, skip_quality=True)
+    assert res[0].hit_tier is None                  # first request misses
+    assert all(r.hit_tier == "dram" for r in res[1:])   # later ones hit
+    assert ctrl.counters["inserts"] == 1
+
+
+def test_event_loop_livelock_guard():
+    loop = EventLoop(max_events=100)
+    loop.push(0.0, EV_TICK, None)
+    with pytest.raises(RuntimeError, match="livelock"):
+        while loop:
+            now, kind, _ = loop.pop()
+            loop.push(now, EV_TICK, None)           # no time progress
+
+
+def test_run_continuous_past_arrivals_terminate(runner, contexts):
+    """Seed bug regression: arrivals in the past / identical timestamps
+    must not livelock the loop."""
+    tm = TimeModel(get_config(FULL), A100, N_ACTIVE)
+    batcher = ContinuousBatcher(runner.model, runner.params, tm, n_slots=1,
+                                capacity=256)
+    kvs = {c.key: runner.prefill_entry(c.tokens) for c in contexts[:2]}
+    lens = {c.key: len(c.tokens) for c in contexts[:2]}
+    reqs = [Request(0, contexts[0].key, contexts[0].probes[0], -5.0, "qa", 3),
+            Request(1, contexts[1].key, contexts[1].probes[0], -5.0, "qa", 3)]
+
+    def load_fn(req, now):
+        return kvs[req.context_key], lens[req.context_key], 0.01
+
+    results = run_continuous(batcher, reqs, load_fn)
+    assert sorted(r.req_id for r in results) == [0, 1]
+
+
+def test_io_channel_queueing():
+    ch = IOChannel("ssd", bandwidth_bps=1e6, latency_s=0.0, concurrency=1)
+    a = ch.submit(0.0, 1_000_000)       # 1 s transfer
+    b = ch.submit(0.0, 1_000_000)       # queues behind a
+    assert a == pytest.approx(1.0) and b == pytest.approx(2.0)
+    par = IOChannel("dram", bandwidth_bps=1e6, latency_s=0.0, concurrency=2)
+    a = par.submit(0.0, 1_000_000)
+    b = par.submit(0.0, 1_000_000)      # parallel stream, no queueing
+    assert a == pytest.approx(1.0) and b == pytest.approx(1.0)
+    assert par.queue_depth(0.5) == 2 and par.queue_depth(1.5) == 0
+
+
+def test_summarize_hand_computed():
+    def rr(req_id, ttft, queue, load, prefill, tier, quality):
+        return RequestResult(req_id, "c", "qa", 0.0, ttft, queue, load,
+                             prefill, tier, "none", 1.0, quality, [1],
+                             decode_s=ttft - queue - load - prefill)
+    res = [rr(0, 0.40, 0.10, 0.20, 0.0, "ssd", 1.0),
+           rr(1, 0.20, 0.00, 0.00, 0.1, None, 0.5)]
+    s = summarize(res)
+    assert s["n"] == 2
+    assert s["ttft_mean_s"] == pytest.approx(0.30)
+    assert s["ttft_p50_s"] == pytest.approx(0.30)
+    assert s["ttft_p90_s"] == pytest.approx(0.38)
+    assert s["quality_mean"] == pytest.approx(0.75)
+    assert s["hit_rate"] == pytest.approx(0.5)
+    assert s["hit_rate_ssd"] == pytest.approx(0.5)
+    assert s["hit_rate_dram"] == 0.0
+    assert s["queue_mean_s"] == pytest.approx(0.05)
+    assert s["load_mean_s"] == pytest.approx(0.10)
+    assert s["prefill_mean_s"] == pytest.approx(0.05)
+    assert s["decode_mean_s"] == pytest.approx(0.10)
+    assert summarize([]) == {"n": 0}

@@ -114,6 +114,66 @@ def test_dram_tier_accounting():
     assert tier.used_bytes == 0 and not tier.has("a")
 
 
+def test_pick_move_frees_bytes_or_none(tmp_path):
+    """Policy invariant: every move returned by pick_move frees bytes in
+    the tier it names; when no freeing move exists it returns None."""
+    c, clock = build(tmp=str(tmp_path), dram_mb=1, ssd_mb=4)
+    pol = c.policy
+    for i in range(20):
+        clock[0] += 1
+        c.insert(f"e{i}", make_kv(T=96 + (i % 4) * 32), "qa")
+        for tname in ("dram", "ssd"):
+            entries = c._entries_in(tname)
+            move = pol.pick_move(tname, entries, clock[0],
+                                 kv_lookup=c.executor.proxies.get)
+            if entries:
+                assert move is None or (move.bytes_freed > 0
+                                        and move.tier == tname)
+            else:
+                assert move is None
+
+
+def test_enforce_terminates_within_capacity(tmp_path):
+    """_enforce must terminate with every tier within capacity even when a
+    single entry exceeds the fast tier (cascade demote -> evict)."""
+    c, clock = build(tmp=str(tmp_path), dram_mb=1, ssd_mb=1)
+    for i in range(10):
+        clock[0] += 1
+        c.insert(f"big{i}", make_kv(T=640), "qa")    # ~>0.3 MB each
+        for t in ("dram", "ssd"):
+            assert c.tiers[t].used_bytes <= c.tiers[t].spec.capacity_bytes
+
+
+def test_ssd_roundtrip_preserves_bytes(tmp_path):
+    from repro.core.compression.base import CompressedEntry
+    from repro.storage.tier import CODEC_ZLIB, SSDTier, DeviceSpec
+    arrays = {"k": RNG.randn(3, 17, 5).astype(np.float32),
+              "v": RNG.randn(3, 17, 5).astype(np.float32),
+              "positions": np.arange(17, dtype=np.int32)}
+    for codec, sub in ((None, "default"), (CODEC_ZLIB, "zlib")):
+        tier = SSDTier(DeviceSpec("ssd", 1 << 30, 1e9, 1e9),
+                       root=str(tmp_path / sub), codec=codec)
+        entry = CompressedEntry("none", 1.0, arrays, {})
+        tier.put("a", entry)
+        back = tier.get("a")
+        assert back.method == "none" and back.rate == 1.0
+        for name, arr in arrays.items():
+            np.testing.assert_array_equal(back.arrays[name], arr)
+            assert back.arrays[name].dtype == arr.dtype
+
+
+def test_ssd_evict_tolerates_unlinked_file(tmp_path):
+    import os
+    from repro.core.compression.base import CompressedEntry
+    tier = SSDTier(DeviceSpec("ssd", 1 << 30, 1e9, 1e9), root=str(tmp_path))
+    entry = CompressedEntry("none", 1.0,
+                            {"k": np.ones((4, 4), np.float32)}, {})
+    tier.put("gone", entry)
+    os.unlink(tier.entry_info("gone")["path"])      # out-of-band deletion
+    tier.evict("gone")                              # must not raise
+    assert not tier.has("gone") and tier.used_bytes == 0
+
+
 def test_marginal_utility_prefers_cheap_drop(tmp_path):
     """The greedy must pick recompression of a low-value entry over
     evicting a high-frequency one."""
