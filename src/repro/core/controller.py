@@ -1,8 +1,10 @@
 """AdaptCacheController: the facade tying estimator + policy + executor.
 
 Serving-engine contract:
-    insert(key, kv, task_type, now=t)  — store a freshly prefilled entry
+    insert(key, kv, task_type, now=t [, transfers])  — store a fresh entry
     fetch(key, now=t)                  — load on hit; (kv, delay breakdown)
+    promote(key, now=t [, transfers])  — speculative prefetch into DRAM
+    prefetch_candidates(now=t)         — hot slow-tier keys, hottest first
     lookup(key)                        — tier name or None
     stats()                            — hit rates per tier, byte counters
 
@@ -16,6 +18,18 @@ use defaults to wall time. One controller may be shared by N engine
 replicas — all state (tiers, meta, estimators) is global to the
 hierarchy while fetch *contention* is modeled engine-side per tier.
 
+Decision vs movement: every state-changing call is an *instantaneous
+placement decision* on the data plane (bytes land immediately, so byte
+conservation is exact at every event), while the *time cost* of each
+byte movement is reported as a ``Transfer`` appended to the caller's
+``transfers`` list. The event engine books those transfers on the
+destination tier's write ``IOChannel`` (``Tier.store_delay``) and the
+source tier's read channel, and fences fetches of still-writing keys —
+so insert write-back, MCKP demotions, and prefetch promotions all
+contend with serving fetches in simulated time. Callers that pass no
+``transfers`` list (unit tests, the serialized baseline loop) keep the
+legacy zero-delay semantics.
+
 Capacity is enforced by the greedy MCKP loop: after any byte growth in a
 tier, apply minimal-marginal-utility-drop moves until all tiers fit
 (demotions cascade fast tier -> slow tier -> eviction).
@@ -24,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.compression.base import KVData, kv_nbytes, kv_num_tokens
 from repro.core.entry import EntryMeta
@@ -47,6 +61,23 @@ class SimClock:
 
     def advance(self, t: float) -> None:
         self.now = max(self.now, t)
+
+
+@dataclasses.dataclass(frozen=True)
+class Transfer:
+    """One queued byte movement emitted by a placement decision.
+
+    ``dst_tier`` is charged on its WRITE channel for ``nbytes``;
+    ``src_tier`` (when the bytes come out of another tier: demote,
+    recompress, promote) is charged on its READ channel for
+    ``read_nbytes`` first. Fresh inserts have no source tier.
+    """
+    key: str
+    kind: str                       # "insert" | "demote" | "recompress" | "promote"
+    dst_tier: str
+    nbytes: int
+    src_tier: Optional[str] = None
+    read_nbytes: int = 0
 
 
 @dataclasses.dataclass
@@ -80,6 +111,7 @@ class AdaptCacheController:
         self.executor = Executor(methods, tiers, tier_order)
         self.meta: Dict[str, EntryMeta] = {}
         self.counters = {"hits": 0, "misses": 0, "inserts": 0,
+                         "prefetches": 0,
                          **{f"hit_{t}": 0 for t in tier_order}}
 
     # -- public API -----------------------------------------------------------
@@ -88,22 +120,38 @@ class AdaptCacheController:
         return m.tier if m and m.tier else None
 
     def insert(self, key: str, kv: KVData, task_type: str,
-               now: Optional[float] = None) -> Placement:
+               now: Optional[float] = None,
+               transfers: Optional[List[Transfer]] = None) -> Placement:
         now = self.clock() if now is None else now
-        if key in self.meta and self.meta[key].tier:
-            return Placement(self.meta[key].tier, self.meta[key].method,
-                             self.meta[key].rate)
-        meta = EntryMeta(key=key, task_type=task_type,
-                         n_tokens=kv_num_tokens(kv),
-                         orig_bytes=kv_nbytes(kv),
-                         redundancy=redundancy_feature(kv),
-                         created_at=now)
+        old = self.meta.get(key)
+        if old is not None and old.tier:
+            return Placement(old.tier, old.method, old.rate)
+        if old is not None:
+            # Re-insert after eviction: the policy's utility ranking runs
+            # on hits/last_hit history, so merge into the surviving meta
+            # instead of rebuilding it (only content-derived features and
+            # the creation stamp refresh).
+            meta = old
+            meta.task_type = task_type
+            meta.n_tokens = kv_num_tokens(kv)
+            meta.orig_bytes = kv_nbytes(kv)
+            meta.redundancy = redundancy_feature(kv)
+            meta.created_at = now
+        else:
+            meta = EntryMeta(key=key, task_type=task_type,
+                             n_tokens=kv_num_tokens(kv),
+                             orig_bytes=kv_nbytes(kv),
+                             redundancy=redundancy_feature(kv),
+                             created_at=now)
         placement = self.policy.admit(meta, kv)
         self.executor.store(meta, kv, placement)
         self.meta[key] = meta
-        self.freq.on_insert(key, now)
+        if not self.freq.seen(key):      # keep the EWMA of returning keys
+            self.freq.on_insert(key, now)
         self.counters["inserts"] += 1
-        self._enforce(placement.tier, now)
+        if transfers is not None:
+            transfers.append(Transfer(key, "insert", meta.tier, meta.nbytes))
+        self._enforce(placement.tier, now, transfers=transfers)
         return placement
 
     def fetch(self, key: str, now: Optional[float] = None
@@ -125,11 +173,67 @@ class AdaptCacheController:
         return FetchResult(kv, meta.tier, meta.method, meta.rate,
                            load, dec, meta.nbytes)
 
+    # -- speculative prefetch ---------------------------------------------------
+    def prefetch_candidates(self, now: Optional[float] = None,
+                            limit: int = 8,
+                            min_hz: float = 0.0) -> List[str]:
+        """Slow-tier resident keys ranked by predicted hit rate (hottest
+        first), filtered to rates >= ``min_hz``. The engine walks this
+        list and lets ``promote`` decide per key whether displacement is
+        safe."""
+        now = self.clock() if now is None else now
+        fast = self.tier_order[0]
+        cands = [(self.freq.predict(m.key, now), m.key)
+                 for m in self.meta.values()
+                 if m.tier is not None and m.tier != fast]
+        return [k for f, k in sorted(cands, key=lambda t: (-t[0], t[1]))
+                if f >= min_hz][:limit]
+
+    def promote(self, key: str, now: Optional[float] = None,
+                transfers: Optional[List[Transfer]] = None
+                ) -> Optional[Transfer]:
+        """Speculatively move a slow-tier entry into the fastest tier.
+
+        Declines (returns None) unless the entry fits in free fast-tier
+        space plus space held by strictly-colder residents — a prefetch
+        must never evict an entry hotter than the one being promoted.
+        """
+        now = self.clock() if now is None else now
+        fast = self.tier_order[0]
+        meta = self.meta.get(key)
+        if meta is None or meta.tier is None or meta.tier == fast:
+            return None
+        if meta.nbytes > self.tiers[fast].spec.capacity_bytes:
+            return None
+        need = meta.nbytes - self.tiers[fast].free_bytes
+        if need > 0:
+            mine = self.freq.predict(key, now)
+            freed = 0
+            for m in sorted(self._entries_in(fast),
+                            key=lambda m: (self.freq.predict(m.key, now),
+                                           m.key)):
+                if self.freq.predict(m.key, now) >= mine:
+                    return None     # would displace an at-least-as-hot entry
+                freed += m.nbytes
+                if freed >= need:
+                    break
+            if freed < need:
+                return None
+        src = meta.tier
+        nb = self.executor.promote(meta, fast)
+        tr = Transfer(key, "promote", fast, nb, src_tier=src, read_nbytes=nb)
+        if transfers is not None:
+            transfers.append(tr)
+        self.counters["prefetches"] += 1
+        self._enforce(fast, now, transfers=transfers)
+        return tr
+
     # -- capacity enforcement ---------------------------------------------------
     def _entries_in(self, tier_name: str):
         return [m for m in self.meta.values() if m.tier == tier_name]
 
-    def _enforce(self, start_tier: str, now: float, max_moves: int = 10000):
+    def _enforce(self, start_tier: str, now: float, max_moves: int = 10000,
+                 transfers: Optional[List[Transfer]] = None):
         pending = [start_tier]
         moves = 0
         while pending and moves < max_moves:
@@ -144,8 +248,17 @@ class AdaptCacheController:
                     kv_lookup=self.executor.proxies.get)
                 if move is None:
                     break
-                affected = self.executor.apply(move, self.meta[move.key])
+                meta = self.meta[move.key]
+                read_nbytes = meta.nbytes
+                affected = self.executor.apply(move, meta)
                 moves += 1
+                if transfers is not None and move.kind != "evict":
+                    # evictions free bytes without writing any; demotes
+                    # and recompressions are real queued byte movements
+                    transfers.append(Transfer(
+                        move.key, move.kind,
+                        move.dst_tier or move.tier, meta.nbytes,
+                        src_tier=move.tier, read_nbytes=read_nbytes))
                 if affected and affected not in pending:
                     pending.append(affected)
                 if moves >= max_moves:

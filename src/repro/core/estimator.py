@@ -163,6 +163,12 @@ class FrequencyEstimator:
         self._rate: Dict[str, float] = {}
         self._last: Dict[str, float] = {}
 
+    def seen(self, key: str) -> bool:
+        """True when the key has EWMA state (insert/hit history). The
+        controller skips the optimistic-prior reset on re-inserts of
+        such keys so eviction does not wipe learned hit rates."""
+        return key in self._rate
+
     def on_insert(self, key: str, now: float) -> None:
         self._rate[key] = self.prior_hz
         self._last[key] = now

@@ -33,7 +33,7 @@ class Executor:
         self.tier_order = list(tier_order)
         self.proxies: Dict[str, KVData] = {}
         self.stats = {"recompress": 0, "demote": 0, "evict": 0,
-                      "bytes_moved": 0}
+                      "promote": 0, "bytes_moved": 0}
 
     # -- store ---------------------------------------------------------------
     def store(self, meta: EntryMeta, kv: KVData, placement: Placement) -> int:
@@ -73,6 +73,20 @@ class Executor:
         kv = self.methods[meta.method].decompress(entry)
         return kv, entry
 
+    # -- promotion (speculative prefetch) ------------------------------------
+    def promote(self, meta: EntryMeta, dst_name: str) -> int:
+        """Move an entry's bytes from its current tier into ``dst_name``
+        (a faster tier) without changing its compression state; returns
+        the bytes written into the destination."""
+        src = self.tiers[meta.tier]
+        entry = src.get(meta.key)
+        src.evict(meta.key)
+        self.tiers[dst_name].put(meta.key, entry)
+        meta.tier = dst_name
+        self.stats["promote"] += 1
+        self.stats["bytes_moved"] += entry.nbytes
+        return entry.nbytes
+
     # -- moves ---------------------------------------------------------------
     def apply(self, move: Move, meta: EntryMeta) -> Optional[str]:
         """Returns the name of a tier whose capacity may now be violated."""
@@ -86,12 +100,14 @@ class Executor:
             return None
 
         if move.kind == "demote":
-            t_idx = self.tier_order.index(move.tier)
-            dst = self.tiers[self.tier_order[t_idx + 1]]
+            dst_name = move.dst_tier
+            if dst_name is None:        # older Move producers: next tier
+                t_idx = self.tier_order.index(move.tier)
+                dst_name = self.tier_order[t_idx + 1]
             entry = tier.get(meta.key)
             tier.evict(meta.key)
-            dst.put(meta.key, entry)
-            meta.tier = self.tier_order[t_idx + 1]
+            self.tiers[dst_name].put(meta.key, entry)
+            meta.tier = dst_name
             self.stats["demote"] += 1
             self.stats["bytes_moved"] += entry.nbytes
             return meta.tier

@@ -33,6 +33,15 @@ from repro.storage.tier import Tier
 
 @dataclasses.dataclass(frozen=True)
 class Move:
+    """One MCKP enforcement step.
+
+    A move is no longer an instantaneous mutation: the controller turns
+    each applied move into a queued ``Transfer`` (see
+    ``repro.core.controller``) so demotions and recompressions are booked
+    on the same I/O channels as serving fetches. ``dst_tier`` names the
+    tier whose write path receives the bytes ("demote": the next tier,
+    "recompress": in place, "evict": nothing is written).
+    """
     key: str
     kind: str                       # "recompress" | "demote" | "evict"
     tier: str                       # tier the move frees bytes in
@@ -40,6 +49,7 @@ class Move:
     rate: float = 1.0               # target rate (recompress)
     bytes_freed: int = 0
     drop_per_byte: float = 0.0
+    dst_tier: Optional[str] = None  # tier receiving the bytes (None: evict)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,7 +159,7 @@ class AdaptivePolicy(BasePolicy):
                 drop = (u_cur - u_new) / freed
                 if best is None or drop < best.drop_per_byte:
                     best = Move(meta.key, "recompress", tier_name, mname,
-                                rate, freed, drop)
+                                rate, freed, drop, dst_tier=tier_name)
 
             # (b) demote to next tier (same state)
             if next_tier is not None:
@@ -158,7 +168,8 @@ class AdaptivePolicy(BasePolicy):
                 drop = (u_cur - u_new) / meta.nbytes
                 if best is None or drop < best.drop_per_byte:
                     best = Move(meta.key, "demote", tier_name, meta.method,
-                                meta.rate, meta.nbytes, drop)
+                                meta.rate, meta.nbytes, drop,
+                                dst_tier=next_tier)
 
             # (c) evict (last tier only)
             if next_tier is None:
@@ -199,6 +210,7 @@ class FixedPolicy(BasePolicy):
         t_idx = self.tier_order.index(tier_name)
         if t_idx + 1 < len(self.tier_order):
             return Move(lru.key, "demote", tier_name, lru.method, lru.rate,
-                        lru.nbytes, 0.0)
+                        lru.nbytes, 0.0,
+                        dst_tier=self.tier_order[t_idx + 1])
         return Move(lru.key, "evict", tier_name, lru.method, lru.rate,
                     lru.nbytes, 0.0)

@@ -6,10 +6,12 @@
 
 Trains the smoke model on the recall task first (so compression has a
 measurable quality effect), optionally fits the paper's offline quality
-estimator, then serves a Poisson workload on the event-driven engine
-(loads/prefills overlap decode; ``--serialized`` selects the legacy
-blocking loop) and prints the TTFT/quality/hit-rate summary with the
-queue/load/prefill/decode breakdown.
+estimator, then serves a Poisson workload on the duplex-async event
+engine (loads/prefills overlap decode, inserts and MCKP moves queue on
+write channels, ``--prefetch N`` enables speculative SSD->DRAM
+promotion; ``--serialized`` selects the legacy blocking loop) and prints
+the TTFT/quality/hit-rate summary with the queue/load/prefill/decode
+and write-back breakdowns.
 """
 from __future__ import annotations
 
@@ -66,6 +68,11 @@ def main(argv=None) -> int:
                     help="engine replicas sharing one cache hierarchy")
     ap.add_argument("--lanes", type=int, default=2,
                     help="continuous-batching lanes per replica")
+    ap.add_argument("--prefetch", type=int, default=0, metavar="N",
+                    help="max in-flight speculative SSD->DRAM promotions "
+                         "(0 disables prefetch)")
+    ap.add_argument("--prefetch-min-hz", type=float, default=0.0,
+                    help="min predicted hit rate for a prefetch candidate")
     ap.add_argument("--serialized", action="store_true",
                     help="use the legacy load-blocking loop (baseline)")
     ap.add_argument("--seed", type=int, default=0)
@@ -92,7 +99,9 @@ def main(argv=None) -> int:
     rig = build_engine(runner, contexts, full_cfg, n_active, policy=policy,
                        alpha=args.alpha, dram_entries=args.dram_entries,
                        ssd_entries=args.ssd_entries,
-                       n_replicas=args.replicas, n_lanes=args.lanes)
+                       n_replicas=args.replicas, n_lanes=args.lanes,
+                       prefetch_max_inflight=args.prefetch,
+                       prefetch_min_hz=args.prefetch_min_hz)
     if args.fit_estimator and args.policy == "adaptive":
         fit_quality_estimator(rig, contexts)
         print("quality estimator fitted")
@@ -104,6 +113,9 @@ def main(argv=None) -> int:
     for k, v in s.items():
         print(f"  {k:16s} {v:.4f}" if isinstance(v, float) else
               f"  {k:16s} {v}")
+    if args.prefetch and not args.serialized:
+        for k, v in rig.engine.prefetch_stats.items():
+            print(f"  prefetch.{k:10s} {v}")
     for k, v in rig.controller.stats().items():
         if isinstance(v, (int, float)):
             print(f"  ctrl.{k:14s} {v}")

@@ -49,7 +49,10 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
                  device: DeviceModel = A100,
                  quality_est: Optional[QualityEstimator] = None,
                  ssd_root: Optional[str] = None,
-                 n_replicas: int = 1, n_lanes: int = 2) -> EngineRig:
+                 n_replicas: int = 1, n_lanes: int = 2,
+                 prefetch_max_inflight: int = 0,
+                 prefetch_min_hz: float = 0.0,
+                 prefetch_cooldown_s: float = 1.0) -> EngineRig:
     methods = default_registry()
     smoke_cfg = runner.model.cfg
 
@@ -90,7 +93,10 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
                                 clock=clock)
     tm = TimeModel(full_cfg, device, n_active_params)
     eng = ServingEngine(runner, ctrl, tm, contexts, n_replicas=n_replicas,
-                        n_lanes=n_lanes, sim_clock=clock)
+                        n_lanes=n_lanes, sim_clock=clock,
+                        prefetch_max_inflight=prefetch_max_inflight,
+                        prefetch_min_hz=prefetch_min_hz,
+                        prefetch_cooldown_s=prefetch_cooldown_s)
     return EngineRig(eng, ctrl, qe, clock)
 
 

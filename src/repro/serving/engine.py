@@ -1,4 +1,4 @@
-"""ServingEngine: event-driven AdaptCache serving simulator.
+"""ServingEngine: duplex-async event-driven AdaptCache serving simulator.
 
 The engine runs the paper's Fig. 1 pipeline as a discrete-event
 simulation instead of a serialized request loop:
@@ -6,29 +6,50 @@ simulation instead of a serialized request loop:
   arrival      -> request lands on the least-loaded replica; a free lane
                   is reserved and the KV fetch / prefill is ISSUED
   load-done    -> hit path: the entry's bytes were booked on the shared
-                  per-tier IOChannel (DRAM: many streams, SSD: one at
-                  1 GB/s — replicas contend) + decompress delay; the lane
-                  joins the replica's continuous batch only now
+                  per-tier read IOChannel (DRAM: many streams, SSD: one
+                  at 1 GB/s — replicas contend) + decompress delay; the
+                  lane joins the replica's continuous batch only now. A
+                  fetch of a key whose bytes are still being written
+                  (in-flight insert / demotion / promotion) fences on
+                  the transfer before its read is booked
   prefill-done -> miss path: recompute booked on the replica's prefill
                   stream (prefills queue behind each other, never behind
                   decode); concurrent misses on one context coalesce onto
-                  a single in-flight prefill; the fresh entry is inserted
-                  into the hierarchy at completion time
+                  a single in-flight prefill; the fresh entry's placement
+                  is decided at completion time and its bytes are booked
+                  on the destination tier's WRITE channel (async
+                  write-back) together with any MCKP demotions the
+                  insert triggered — enforcement contends with serving
+  write-done   -> a queued transfer (insert write-back, demotion,
+                  recompression, prefetch promotion) finished; fenced
+                  fetches of that key may now start
   decode-tick  -> ALL active lanes of a replica decode one step in one
-                  batched model call; ticks keep firing while loads are
-                  in flight — decode never stalls on I/O
+                  batched model call; ticks keep firing while loads and
+                  writes are in flight — decode never stalls on I/O
+
+Speculative prefetch: when enabled (``prefetch_max_inflight > 0``), idle
+slow-tier read-channel time is used to promote the hottest SSD-resident
+entries (ranked by ``FrequencyEstimator`` predictions) into DRAM with no
+lane reserved, so a later arrival for that key is a pure DRAM hit. A
+promotion never displaces an entry hotter than the one promoted
+(controller guard), and per-request ``prefetch_hit`` plus engine-level
+``prefetch_stats`` (issued / hits / wasted) attribute the effect.
 
 TTFT decomposes into queue (lane wait) + load|prefill (I/O / compute
 queueing included) + decode (teacher-forced question steps), reported
-per request in ``RequestResult``. Simulated time comes from the
-calibrated full-scale ``TimeModel``; token content is computed for real
-on the smoke model (batched lane decode is bit-exact vs the sequential
-path), so quality attribution is exact. The controller's clock is the
-event clock: ``fetch`` sees issue time, ``insert`` sees completion time.
+per request in ``RequestResult`` along with the write-back breakdown
+(``wb_queue_s`` / ``wb_transfer_s`` for the insert this request owned,
+``write_wait_s`` for time fenced behind an in-flight write). Simulated
+time comes from the calibrated full-scale ``TimeModel``; token content
+is computed for real on the smoke model (batched lane decode is
+bit-exact vs the sequential path), so quality attribution is exact. The
+controller's clock is the event clock: ``fetch`` sees issue time,
+``insert`` sees completion time.
 
 ``process_serialized`` preserves the seed's one-request-at-a-time loop
-(every load blocks the server) as the measured baseline the event engine
-is judged against; see ``benchmarks/fig3_overlap.py``.
+(every load blocks the server, inserts land instantly) as the measured
+baseline the event engine is judged against; see
+``benchmarks/fig3_overlap.py`` and ``benchmarks/fig4_prefetch.py``.
 """
 from __future__ import annotations
 
@@ -38,12 +59,12 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.controller import AdaptCacheController, SimClock
-from repro.serving.metrics import percentile_summary, quality_score
+from repro.core.controller import AdaptCacheController, SimClock, Transfer
+from repro.serving.metrics import percentile_summary, quality_score, safe_mean
 from repro.serving.runner import ModelRunner
 from repro.serving.scheduler import (
-    EV_ARRIVAL, EV_LOAD_DONE, EV_PREFILL_DONE, EV_TICK, EVENT_NAMES,
-    ContinuousBatcher, EventLoop, LaneSet,
+    EV_ARRIVAL, EV_LOAD_DONE, EV_PREFILL_DONE, EV_TICK, EV_WRITE_DONE,
+    EVENT_NAMES, ContinuousBatcher, EventLoop, LaneSet,
 )
 from repro.serving.timemodel import ComputeChannel, IOChannel, TimeModel
 from repro.serving.workload import Context, Request
@@ -69,6 +90,12 @@ class RequestResult:
     decode_s: float = 0.0            # ttft - queue - load - prefill
     finish_s: float = 0.0            # last answer token time
     replica: int = 0
+    truncated: bool = False          # lane hit cache capacity early;
+    #                                  excluded from TTFT aggregates
+    prefetch_hit: bool = False       # hit served by a speculative promotion
+    write_wait_s: float = 0.0        # fetch fenced behind an in-flight write
+    wb_queue_s: float = 0.0          # this request's insert: write-queue wait
+    wb_transfer_s: float = 0.0       # ... and pure write-transfer time
 
 
 class _Replica(LaneSet):
@@ -86,7 +113,10 @@ class ServingEngine:
                  max_new_tokens: int = 24, decode_batch: int = 8,
                  n_replicas: int = 1, n_lanes: int = 2,
                  io_streams: Optional[Dict[str, int]] = None,
-                 sim_clock: Optional[SimClock] = None):
+                 sim_clock: Optional[SimClock] = None,
+                 prefetch_max_inflight: int = 0,
+                 prefetch_min_hz: float = 0.0,
+                 prefetch_cooldown_s: float = 1.0):
         if n_replicas < 1 or n_lanes < 1:
             raise ValueError("need at least one replica with one lane")
         self.runner = runner
@@ -100,6 +130,16 @@ class ServingEngine:
         self.io_streams = dict(DEFAULT_IO_STREAMS if io_streams is None
                                else io_streams)
         self.sim_clock = sim_clock
+        # speculative prefetch: 0 in-flight = disabled; min_hz is the
+        # FrequencyEstimator prediction floor for promotion candidates;
+        # a key whose promotion is wasted (demoted before any hit) is
+        # barred from re-promotion for cooldown_s of sim time — the freq
+        # guard and the policy's own enforcement ordering can disagree
+        # (e.g. LRU demotes by last_hit), which would otherwise ping-pong
+        self.prefetch_max_inflight = prefetch_max_inflight
+        self.prefetch_min_hz = prefetch_min_hz
+        self.prefetch_cooldown_s = prefetch_cooldown_s
+        self.prefetch_stats = {"issued": 0, "hits": 0, "wasted": 0}
         self._ref_cache: Dict[str, List[int]] = {}
         self._prefill_cache: Dict[str, Any] = {}
         self.last_trace: List[Tuple[float, str, Dict[str, Any]]] = []
@@ -142,10 +182,19 @@ class ServingEngine:
         breakdown. Loads and prefills overlap decode (see module doc)."""
         loop = EventLoop()
         trace = self.last_trace = []
+        self.prefetch_stats = {"issued": 0, "hits": 0, "wasted": 0}
         channels = {
             name: IOChannel(name, tier.spec.read_bw, tier.spec.latency_s,
                             self.io_streams.get(name, 1))
             for name, tier in self.controller.tiers.items()}
+        # duplex: writes (insert write-back, demotions, promotions) queue
+        # on their own per-tier channels, priced by Tier.store_delay
+        wchannels = {
+            name: IOChannel(f"{name}_w", tier.spec.write_bw,
+                            tier.spec.latency_s,
+                            self.io_streams.get(name, 1))
+            for name, tier in self.controller.tiers.items()}
+        fast_tier = self.controller.tier_order[0]
         replicas = [
             _Replica(i, ContinuousBatcher(self.runner.model,
                                           self.runner.params, self.tm,
@@ -156,6 +205,14 @@ class ServingEngine:
         pending: Dict[int, Dict[str, Any]] = {}
         # coalesced in-flight prefills: ctx_key -> (kv, done_time)
         inflight: Dict[str, Tuple[Any, float]] = {}
+        # in-flight writes: key -> sim time its bytes are fully landed;
+        # fetches of these keys fence on the transfer
+        ready_at: Dict[str, float] = {}
+        # speculative promotions not yet rewarded by a hit
+        prefetched: Dict[str, bool] = {}
+        # keys barred from re-promotion after a wasted promotion
+        pf_cooldown: Dict[str, float] = {}
+        pf_inflight = [0]
         results: List[RequestResult] = []
 
         def note(now: float, kind: str, **info) -> None:
@@ -165,13 +222,83 @@ class ServingEngine:
             if self.sim_clock is not None:
                 self.sim_clock.advance(now)
 
+        def book(now: float, transfers: List[Transfer], cause: str
+                 ) -> List[Tuple[Transfer, float, float]]:
+            """Book controller-emitted transfers: source-tier read first
+            (contends with serving fetches), then the destination write
+            channel. Returns (transfer, queue_s, transfer_s) per entry;
+            fences the key until its write lands."""
+            out = []
+            for tr in transfers:
+                t0 = now
+                if tr.src_tier is not None:
+                    t0 = channels[tr.src_tier].submit(now, tr.read_nbytes)
+                # the write is priced by the destination tier's own
+                # store_delay model, queued on its write channel
+                start, done = wchannels[tr.dst_tier].book_service(
+                    t0, self.controller.tiers[tr.dst_tier].store_delay(
+                        tr.nbytes))
+                ready_at[tr.key] = max(ready_at.get(tr.key, 0.0), done)
+                if tr.kind == "demote" and prefetched.pop(tr.key, None):
+                    self.prefetch_stats["wasted"] += 1
+                    pf_cooldown[tr.key] = now + self.prefetch_cooldown_s
+                note(now, "write_issue", key=tr.key, move=tr.kind,
+                     tier=tr.dst_tier, nbytes=tr.nbytes, done=done,
+                     cause=cause)
+                loop.push(done, EV_WRITE_DONE, (tr, cause))
+                out.append((tr, start - now, done - start))
+            return out
+
+        def maybe_prefetch(now: float) -> None:
+            """Use idle slow-tier read-channel time to promote hot
+            SSD-resident entries into DRAM — no lane reserved; a later
+            arrival for the key becomes a pure DRAM hit."""
+            if self.prefetch_max_inflight <= 0:
+                return
+            while pf_inflight[0] < self.prefetch_max_inflight:
+                issued = False
+                for key in self.controller.prefetch_candidates(
+                        now=now, limit=8, min_hz=self.prefetch_min_hz):
+                    if ready_at.get(key, 0.0) > now:
+                        continue                 # already moving
+                    if pf_cooldown.get(key, 0.0) > now:
+                        continue                 # recently bounced back
+                    src = self.controller.lookup(key)
+                    if src is None or src == fast_tier:
+                        continue
+                    if channels[src].queue_depth(now) > 0:
+                        continue                 # channel busy serving
+                    transfers: List[Transfer] = []
+                    tr = self.controller.promote(key, now=now,
+                                                 transfers=transfers)
+                    if tr is None:               # displacement unsafe
+                        continue
+                    pf_inflight[0] += 1
+                    prefetched[key] = True
+                    self.prefetch_stats["issued"] += 1
+                    note(now, "prefetch_issue", key=key, src=src,
+                         nbytes=tr.nbytes)
+                    book(now, transfers, "prefetch")
+                    issued = True
+                    break
+                if not issued:
+                    return
+
         def dispatch(rep: _Replica, lane: int, req: Request,
                      now: float) -> None:
             ctx = self.contexts[req.context_key]
             fetched = self.controller.fetch(req.context_key, now=now)
             if fetched is not None:
-                io_done = channels[fetched.tier].submit(now, fetched.nbytes)
+                # fence: the entry's bytes may still be in flight toward
+                # its tier (async insert/demote/promote)
+                start = max(now, ready_at.get(req.context_key, 0.0))
+                io_done = channels[fetched.tier].submit(start, fetched.nbytes)
                 done = io_done + fetched.decompress_delay_s
+                pf_hit = (fetched.tier == fast_tier
+                          and prefetched.pop(req.context_key, None)
+                          is not None)
+                if pf_hit:
+                    self.prefetch_stats["hits"] += 1
                 note(now, "load_issue", req_id=req.req_id,
                      tier=fetched.tier, nbytes=fetched.nbytes,
                      replica=rep.idx, done=done)
@@ -179,7 +306,9 @@ class ServingEngine:
                           (rep, lane, req, fetched.kv, len(ctx.tokens),
                            now, {"hit_tier": fetched.tier,
                                  "method": fetched.method,
-                                 "rate": fetched.rate}))
+                                 "rate": fetched.rate,
+                                 "prefetch_hit": pf_hit,
+                                 "write_wait_s": start - now}))
             elif req.context_key in inflight:
                 kv, done = inflight[req.context_key]
                 done = max(done, now)
@@ -214,15 +343,22 @@ class ServingEngine:
                 rep.waiting.append(req)
                 note(now, "arrival", req_id=req.req_id, replica=rep.idx)
                 issue(rep, now)
+                maybe_prefetch(now)
 
             elif kind in (EV_LOAD_DONE, EV_PREFILL_DONE):
                 rep, lane, req, kv, orig_len, issue_t, extra = payload
                 if kind == EV_PREFILL_DONE:
-                    if isinstance(extra, str):       # owner of the prefill
-                        self.controller.insert(req.context_key, kv, extra,
-                                               now=now)
-                        inflight.pop(req.context_key, None)
                     hit = {"hit_tier": None, "method": "none", "rate": 1.0}
+                    if isinstance(extra, str):       # owner of the prefill
+                        transfers: List[Transfer] = []
+                        self.controller.insert(req.context_key, kv, extra,
+                                               now=now, transfers=transfers)
+                        inflight.pop(req.context_key, None)
+                        booked = book(now, transfers, "insert")
+                        for tr, q_s, x_s in booked:
+                            if tr.kind == "insert":
+                                hit["wb_queue_s"] = q_s
+                                hit["wb_transfer_s"] = x_s
                     delays = {"load_s": 0.0, "prefill_s": now - issue_t}
                 else:
                     hit = extra
@@ -234,11 +370,23 @@ class ServingEngine:
                 note(now, EVENT_NAMES[kind], req_id=req.req_id,
                      replica=rep.idx, lane=lane)
                 rep.ensure_tick(loop, now)
+                maybe_prefetch(now)
+
+            elif kind == EV_WRITE_DONE:
+                tr, cause = payload
+                if ready_at.get(tr.key, 0.0) <= now:
+                    ready_at.pop(tr.key, None)
+                if tr.kind == "promote":
+                    pf_inflight[0] -= 1
+                note(now, "write_done", key=tr.key, move=tr.kind,
+                     tier=tr.dst_tier, cause=cause)
+                maybe_prefetch(now)
 
             elif kind == EV_TICK:
                 rep = payload
                 done = rep.tick(loop, now)
                 if done is None:            # all lanes idle; chain stopped
+                    maybe_prefetch(now)
                     continue
                 note(now, "tick", replica=rep.idx, finished=len(done),
                      lanes=sum(s.active for s in rep.batcher.slots)
@@ -257,8 +405,14 @@ class ServingEngine:
                         self._score(req, ctx, sched.tokens, skip_quality),
                         sched.tokens,
                         decode_s=sched.ttft_s - non_decode,
-                        finish_s=sched.finish_s, replica=rec["replica"]))
+                        finish_s=sched.finish_s, replica=rec["replica"],
+                        truncated=sched.truncated,
+                        prefetch_hit=rec.get("prefetch_hit", False),
+                        write_wait_s=rec.get("write_wait_s", 0.0),
+                        wb_queue_s=rec.get("wb_queue_s", 0.0),
+                        wb_transfer_s=rec.get("wb_transfer_s", 0.0)))
                 issue(rep, now)
+                maybe_prefetch(now)
 
         results.sort(key=lambda r: (r.arrival_s, r.req_id))
         return results
@@ -328,7 +482,10 @@ class ServingEngine:
 def summarize(results: Sequence[RequestResult]) -> Dict[str, float]:
     if not results:
         return {"n": 0}
-    ttfts = np.array([r.ttft_s for r in results])
+    # truncated lanes carry fabricated TTFTs (capacity ran out
+    # mid-question) — exclude them from the latency aggregates
+    valid = [r for r in results if not r.truncated] or list(results)
+    ttfts = np.array([r.ttft_s for r in valid])
     quals = np.array([r.quality for r in results])
     hits = [r for r in results if r.hit_tier is not None]
     n = len(results)
@@ -342,6 +499,20 @@ def summarize(results: Sequence[RequestResult]) -> Dict[str, float]:
         "queue_mean_s": float(np.mean([r.queue_s for r in results])),
         "load_mean_s": float(np.mean([r.load_s for r in results])),
         "prefill_mean_s": float(np.mean([r.prefill_s for r in results])),
-        "decode_mean_s": float(np.mean([r.decode_s for r in results])),
+        # truncated lanes also poison decode_s (derived from the
+        # fabricated TTFT), so it averages over valid results only
+        "decode_mean_s": float(np.mean([r.decode_s for r in valid])),
+        "truncated_rate": sum(r.truncated for r in results) / n,
+        "prefetch_hit_rate": sum(r.prefetch_hit for r in results) / n,
+        # async write-back breakdown: fence waits on fetches, and the
+        # write-queue/transfer split per OWNED insert (coalesced misses
+        # carry no write and would dilute the per-insert cost)
+        "write_wait_mean_s": safe_mean([r.write_wait_s for r in results]),
+        "wb_queue_mean_s": safe_mean(
+            [r.wb_queue_s for r in results if r.hit_tier is None
+             and (r.wb_queue_s > 0 or r.wb_transfer_s > 0)]),
+        "wb_transfer_mean_s": safe_mean(
+            [r.wb_transfer_s for r in results if r.hit_tier is None
+             and (r.wb_queue_s > 0 or r.wb_transfer_s > 0)]),
     }
     return out

@@ -8,6 +8,8 @@ codebleu_proxy — weighted n-gram overlap (coding; full CodeBLEU needs ASTs,
                  we use its n-gram core as the proxy at token level)
 percentile_summary — mean/p50/p90/p99 of a latency sample under stable
                  key names ("<prefix>_mean_s", ...)
+safe_mean  — mean of a possibly-empty sample (0.0 when empty); used for
+                 the write-back queue/transfer and prefetch breakdowns
 """
 from __future__ import annotations
 
@@ -28,6 +30,11 @@ def percentile_summary(prefix: str, values: Sequence[float]
         f"{prefix}_p90_s": float(np.percentile(arr, 90)),
         f"{prefix}_p99_s": float(np.percentile(arr, 99)),
     }
+
+
+def safe_mean(values: Sequence[float]) -> float:
+    vals = list(values)
+    return float(np.mean(vals)) if vals else 0.0
 
 
 def token_f1(pred: Sequence[int], ref: Sequence[int]) -> float:

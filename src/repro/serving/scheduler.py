@@ -13,13 +13,18 @@ Two layers live here:
   simulated time uses the full-scale ``timemodel``.
 
 * ``EventLoop`` — a priority event queue (arrival / load-complete /
-  prefill-complete / decode-tick) with a monotonic simulated clock and a
-  zero-progress livelock guard. KV loads and prefills are *booked* on
-  I/O / compute channels and complete asynchronously, so decode ticks
-  never stall on storage: a lane joins the batch only when its
-  load-complete event fires. ``repro.serving.engine.ServingEngine`` is
-  the full AdaptCache front end on top of this; ``run_continuous`` below
-  is the thin single-batcher harness used by the scheduler tests.
+  prefill-complete / decode-tick / write-complete) with a monotonic
+  simulated clock and a zero-progress livelock guard. The I/O model is
+  fully duplex-async: KV loads and prefills are *booked* on read /
+  compute channels, and every byte movement INTO a tier (insert
+  write-back, MCKP demotion, speculative prefetch promotion) is booked
+  on the destination tier's write channel, completing via
+  ``EV_WRITE_DONE``. Decode ticks never stall on storage: a lane joins
+  the batch only when its load-complete event fires, and a fetch of a
+  still-writing entry fences on the in-flight transfer.
+  ``repro.serving.engine.ServingEngine`` is the full AdaptCache front
+  end on top of this; ``run_continuous`` below is the thin
+  single-batcher harness used by the scheduler tests.
 """
 from __future__ import annotations
 
@@ -64,6 +69,10 @@ class ScheduledResult:
     ttft_s: float
     finish_s: float
     tokens: List[int]
+    # lane ran out of cache capacity before the answer completed; when it
+    # happened mid-question the TTFT is fabricated — aggregates must
+    # exclude truncated results (see ``summarize``)
+    truncated: bool = False
 
 
 _DECODE_CACHE: Dict[int, Tuple[Any, Any]] = {}   # id(model) -> (ref, fn)
@@ -99,39 +108,46 @@ class ContinuousBatcher:
     # -- lane loading ---------------------------------------------------------
     def _write_lane(self, lane: int, kv: KVData) -> int:
         """Write a (decompressed) entry into cache lane ``lane``; returns
-        number of occupied slots."""
+        number of occupied slots.
+
+        Updates are per-leaf ``.at[...].set`` on the target lane only —
+        no host round-trip of the whole batched cache pytree (the seed
+        version copied every lane of every layer through numpy on each
+        admission, an O(whole-cache) transfer per request).
+        """
         cfg = self.model.cfg
-        host = jax.tree.map(lambda x: np.array(x), self.cache)
         n_kept = int(kv["positions"].shape[0]) if "positions" in kv else 0
         ai = mi = 0
         hd = cfg.resolved_head_dim
-        for i, kind, (sect, j, g) in _layer_cache_refs(host, cfg):
-            blk = host[sect][j]
+        for i, kind, (sect, j, g) in _layer_cache_refs(self.cache, cfg):
+            blk = self.cache[sect][j]
 
-            def put(ref, val):
+            def put(d, name, val):
+                val = jnp.asarray(val)
                 if g is not None:
-                    ref[g, lane, :val.shape[0]] = val
+                    d[name] = d[name].at[g, lane, :val.shape[0]].set(val)
                 else:
-                    ref[lane, :val.shape[0]] = val
+                    d[name] = d[name].at[lane, :val.shape[0]].set(val)
+
+            def put_full(d, name, val):
+                val = jnp.asarray(val)
+                if g is not None:
+                    d[name] = d[name].at[g, lane].set(val)
+                else:
+                    d[name] = d[name].at[lane].set(val)
 
             if kind == LayerKind.MAMBA:
-                def put_full(ref, val):
-                    if g is not None:
-                        ref[g, lane] = val
-                    else:
-                        ref[lane] = val
-                put_full(blk["mamba"]["ssm"], kv["ssm"][mi])
-                put_full(blk["mamba"]["conv"], kv["conv"][mi])
+                put_full(blk["mamba"], "ssm", kv["ssm"][mi])
+                put_full(blk["mamba"], "conv", kv["conv"][mi])
                 mi += 1
             elif cfg.attn_kind == AttnKind.MLA:
-                put(blk["self"]["ckv"], kv["ckv"][ai])
-                put(blk["self"]["krope"], kv["krope"][ai])
+                put(blk["self"], "ckv", kv["ckv"][ai])
+                put(blk["self"], "krope", kv["krope"][ai])
                 ai += 1
             else:
-                put(blk["self"]["k"], kv["k"][ai].reshape(n_kept, -1, hd))
-                put(blk["self"]["v"], kv["v"][ai].reshape(n_kept, -1, hd))
+                put(blk["self"], "k", kv["k"][ai].reshape(n_kept, -1, hd))
+                put(blk["self"], "v", kv["v"][ai].reshape(n_kept, -1, hd))
                 ai += 1
-        self.cache = jax.tree.map(jnp.asarray, host)
         return n_kept
 
     def free_lanes(self) -> List[int]:
@@ -181,14 +197,16 @@ class ContinuousBatcher:
                         s.ttft_s = now + dt - s.req.arrival_s
             else:
                 s.generated.append(int(nxt[i]))
-            if (not s.pending and
-                    len(s.generated) >= s.req.max_new_tokens) or \
-                    s.write_slot >= self.capacity:
+            answered = (not s.pending
+                        and len(s.generated) >= s.req.max_new_tokens)
+            out_of_capacity = s.write_slot >= self.capacity
+            if answered or out_of_capacity:
                 done.append(ScheduledResult(
                     s.req.req_id, s.req.context_key,
                     s.ttft_s if s.ttft_s is not None else now + dt -
                     s.req.arrival_s,
-                    now + dt, list(s.generated)))
+                    now + dt, list(s.generated),
+                    truncated=out_of_capacity and not answered))
                 self.slots[i] = SlotState()
         return done, dt
 
@@ -200,13 +218,18 @@ class ContinuousBatcher:
 # Event kinds, in tie-break priority order at equal timestamps: completions
 # land before arrivals so a lane freed at t can absorb a request arriving
 # at t, and ticks run last so they see every admission made "at" t.
+# Write completions (insert write-back, demotions, prefetch promotions)
+# order after ticks: in-flight-write fencing is time-based (``ready_at``),
+# so same-timestamp ordering only affects the trace, not results.
 EV_LOAD_DONE = 0
 EV_PREFILL_DONE = 1
 EV_ARRIVAL = 2
 EV_TICK = 3
+EV_WRITE_DONE = 4
 
 EVENT_NAMES = {EV_LOAD_DONE: "load_done", EV_PREFILL_DONE: "prefill_done",
-               EV_ARRIVAL: "arrival", EV_TICK: "tick"}
+               EV_ARRIVAL: "arrival", EV_TICK: "tick",
+               EV_WRITE_DONE: "write_done"}
 
 
 class EventLoop:

@@ -18,7 +18,7 @@ what makes overlapping loads against decode worth measuring.
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Tuple
 
 from repro.configs.base import ModelConfig
 
@@ -81,13 +81,23 @@ class IOChannel:
         self._free_at: List[float] = [0.0] * concurrency
         self.busy_s = 0.0               # total occupied stream-seconds
 
-    def submit(self, now: float, nbytes: int) -> float:
+    def book_service(self, now: float, service_s: float
+                     ) -> "Tuple[float, float]":
+        """Book an externally-priced service time (e.g. a tier's
+        ``store_delay``) and return ``(start, done)``: queue wait is
+        ``start - now``, pure transfer time is ``done - start``."""
         i = min(range(len(self._free_at)), key=self._free_at.__getitem__)
         start = max(now, self._free_at[i])
-        xfer = self.latency_s + nbytes / self.bandwidth_bps
-        self._free_at[i] = start + xfer
-        self.busy_s += xfer
-        return start + xfer
+        self._free_at[i] = start + service_s
+        self.busy_s += service_s
+        return start, start + service_s
+
+    def book(self, now: float, nbytes: int) -> "Tuple[float, float]":
+        return self.book_service(now, self.latency_s
+                                 + nbytes / self.bandwidth_bps)
+
+    def submit(self, now: float, nbytes: int) -> float:
+        return self.book(now, nbytes)[1]
 
     def queue_depth(self, now: float) -> int:
         return sum(1 for t in self._free_at if t > now)

@@ -50,11 +50,21 @@ PAPER_SSD = DeviceSpec("ssd", 400 << 30, 1e9, 1e9, 100e-6)
 
 
 class Tier:
-    """Base tier: capacity accounting + load-delay model."""
+    """Base tier: capacity accounting + load/store delay models.
+
+    ``load_delay`` prices the read path (fetch toward the accelerator);
+    ``store_delay`` prices the write path and is the service time the
+    event engine books on the tier's write ``IOChannel`` for insert
+    write-back, MCKP demotions, and prefetch promotions — writes queue
+    and contend in simulated time instead of landing instantly.
+    ``bytes_written`` counts every byte that entered the tier via
+    ``put`` (duplex write-traffic accounting).
+    """
 
     def __init__(self, spec: DeviceSpec):
         self.spec = spec
         self.used_bytes = 0
+        self.bytes_written = 0
         self._meta: Dict[str, Dict[str, Any]] = {}
 
     # -- delay model --------------------------------------------------------
@@ -98,6 +108,7 @@ class DRAMTier(Tier):
         self._meta[key] = {"nbytes": nb, "method": entry.method,
                            "rate": entry.rate}
         self.used_bytes += nb
+        self.bytes_written += nb
         return nb
 
     def get(self, key: str) -> CompressedEntry:
@@ -184,6 +195,7 @@ class SSDTier(Tier):
                            "disk_bytes": len(framed) + 4 + _HEADER.size,
                            "path": path}
         self.used_bytes += nb
+        self.bytes_written += nb
         return nb
 
     def get(self, key: str) -> CompressedEntry:

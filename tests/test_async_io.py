@@ -1,0 +1,310 @@
+"""Duplex-async storage I/O: write-back fencing, queued MCKP transfers,
+speculative prefetch invariants, trace determinism with prefetch on, and
+the continuous-batcher lane bugfix regressions (no host round-trip lane
+writes, explicit capacity truncation)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.compression import default_registry
+from repro.core.compression.base import kv_nbytes
+from repro.core.controller import AdaptCacheController, SimClock
+from repro.core.estimator import (
+    DEFAULT_DECOMPRESS_BPS, DelayProfile, FrequencyEstimator,
+)
+from repro.core.policy import FixedPolicy
+from repro.models import build_model
+from repro.serving.engine import RequestResult, ServingEngine, summarize
+from repro.serving.runner import ModelRunner, _layer_cache_refs
+from repro.serving.scheduler import ContinuousBatcher
+from repro.serving.timemodel import A100, TimeModel
+from repro.serving.workload import Request, make_contexts, round_robin_requests
+from repro.storage.tier import DRAMTier, DeviceSpec, SSDTier
+
+FULL = "adaptcache-8b"
+N_ACTIVE = 8_030_000_000
+
+
+@pytest.fixture(scope="module")
+def runner():
+    cfg = get_config(FULL, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return ModelRunner(model, params, capacity=256)
+
+
+@pytest.fixture(scope="module")
+def contexts(runner):
+    rng = np.random.RandomState(4)
+    return make_contexts(rng, runner.model.cfg.vocab_size, 2, min_len=64,
+                         max_len=96, n_probes=2)
+
+
+def _build(runner, contexts, tmp, dram_entries=1.0, ssd_load_s=0.05,
+           dram_write_s=None, **engine_kw):
+    """FixedPolicy(none) rig with a ``dram_entries``-sized DRAM tier, an
+    SSD whose per-entry read takes ~``ssd_load_s`` sim seconds, and an
+    optionally slow DRAM write path (``dram_write_s`` per entry)."""
+    kv = runner.prefill_entry(contexts[0].tokens)
+    nb = kv_nbytes(kv)
+    dram_wbw = 16e9 if dram_write_s is None else nb / dram_write_s
+    methods = default_registry()
+    tiers = {"dram": DRAMTier(DeviceSpec("dram",
+                                         int(nb * 1.5 * dram_entries),
+                                         16e9, dram_wbw, 1e-6)),
+             "ssd": SSDTier(DeviceSpec("ssd", nb * 100, nb / ssd_load_s,
+                                       nb / ssd_load_s, 1e-5), root=tmp)}
+    clock = SimClock()
+    ctrl = AdaptCacheController(
+        methods, tiers, ["dram", "ssd"],
+        FixedPolicy(methods, ["dram", "ssd"], "none", 1.0),
+        DelayProfile(dict(DEFAULT_DECOMPRESS_BPS)), FrequencyEstimator(),
+        clock=clock)
+    tm = TimeModel(get_config(FULL), A100, N_ACTIVE)
+    eng = ServingEngine(runner, ctrl, tm, contexts, sim_clock=clock,
+                        **engine_kw)
+    return eng, ctrl
+
+
+# ---------------------------------------------------------------------------
+# async write-back
+# ---------------------------------------------------------------------------
+
+def test_fetch_fences_on_inflight_insert(runner, contexts, tmp_path):
+    """A fetch of a key whose insert write-back is still in flight must
+    wait for the transfer; the owning miss reports the write breakdown."""
+    ctx = contexts[0]
+    eng, ctrl = _build(runner, contexts, str(tmp_path), dram_entries=50,
+                       dram_write_s=0.2, n_lanes=2)
+    reqs = [Request(0, ctx.key, ctx.probes[0], 0.0, ctx.task_type, 4),
+            # arrives after the prefill (~1e-5 s) but well inside the
+            # 0.2 s write-back window
+            Request(1, ctx.key, ctx.probes[1], 0.05, ctx.task_type, 4)]
+    res = eng.process(reqs, skip_quality=True)
+    a = next(r for r in res if r.req_id == 0)
+    b = next(r for r in res if r.req_id == 1)
+    assert a.hit_tier is None                      # miss owned the insert
+    assert 0.15 < a.wb_transfer_s < 0.35           # ~0.2 s write modeled
+    assert a.wb_queue_s == pytest.approx(0.0, abs=1e-6)
+    assert b.hit_tier == "dram"
+    assert b.write_wait_s > 0.1                    # fenced on the write
+    assert b.load_s >= b.write_wait_s
+    kinds = [k for _, k, _ in eng.last_trace]
+    assert "write_issue" in kinds and "write_done" in kinds
+    s = summarize(res)
+    assert s["write_wait_mean_s"] > 0.05
+    assert s["wb_transfer_mean_s"] > 0.07          # a's write / misses
+
+
+def test_insert_write_does_not_block_owner(runner, contexts, tmp_path):
+    """The missing request itself admits at prefill completion — its
+    TTFT must not include the 0.2 s write-back it triggered."""
+    ctx = contexts[0]
+    eng, _ = _build(runner, contexts, str(tmp_path), dram_entries=50,
+                    dram_write_s=0.2, n_lanes=1)
+    res = eng.process([Request(0, ctx.key, ctx.probes[0], 0.0,
+                               ctx.task_type, 4)], skip_quality=True)
+    assert res[0].ttft_s < 0.1
+
+
+def test_byte_conservation_across_queued_transfers(runner, contexts,
+                                                   tmp_path):
+    """Inserts, demotions, and promotions are booked asynchronously, but
+    the data plane stays exact: every entry lives in exactly the tier
+    its meta says, and per-tier byte accounting matches entry sums."""
+    eng, ctrl = _build(runner, contexts, str(tmp_path), dram_entries=1.0,
+                       ssd_load_s=0.02, n_lanes=2,
+                       prefetch_max_inflight=1)
+    reqs = round_robin_requests(contexts, 18, 0.05, max_new_tokens=4)
+    res = eng.process(reqs, skip_quality=True)
+    assert sorted(r.req_id for r in res) == list(range(18))
+    for tname, tier in ctrl.tiers.items():
+        metas = [m for m in ctrl.meta.values() if m.tier == tname]
+        assert tier.used_bytes == sum(m.nbytes for m in metas)
+        assert tier.used_bytes <= tier.spec.capacity_bytes
+        for m in metas:
+            assert tier.has(m.key)
+        assert len(tier) == len(metas)
+        assert tier.bytes_written >= tier.used_bytes
+    # no key is resident in two tiers at once
+    for key, m in ctrl.meta.items():
+        residents = [t for t in ctrl.tiers.values() if t.has(key)]
+        assert len(residents) == (1 if m.tier else 0)
+
+
+# ---------------------------------------------------------------------------
+# speculative prefetch
+# ---------------------------------------------------------------------------
+
+def _warm_two(eng, ctrl, runner, contexts):
+    """Insert two contexts; DRAM fits one, so the LRU lands on SSD."""
+    for c in contexts[:2]:
+        ctrl.insert(c.key, runner.prefill_entry(c.tokens), c.task_type,
+                    now=0.0)
+    tiers = {ctrl.lookup(contexts[0].key), ctrl.lookup(contexts[1].key)}
+    assert tiers == {"dram", "ssd"}
+    ssd_key = next(c.key for c in contexts[:2]
+                   if ctrl.lookup(c.key) == "ssd")
+    return ssd_key
+
+
+def test_prefetch_converts_ssd_hits_to_dram_hits(runner, contexts,
+                                                 tmp_path):
+    ssd_key = None
+    traces = []
+    for run in range(2):                    # second run: determinism
+        eng, ctrl = _build(runner, contexts, str(tmp_path / str(run)),
+                           dram_entries=1.0, ssd_load_s=0.05, n_lanes=2,
+                           prefetch_max_inflight=1)
+        ssd_key = _warm_two(eng, ctrl, runner, contexts)
+        by_key = {c.key: c for c in contexts}
+        reqs = [Request(i, ssd_key, by_key[ssd_key].probes[0], 0.3 * (i + 1),
+                        "qa", 4) for i in range(4)]
+        res = eng.process(reqs, skip_quality=True)
+        traces.append(list(eng.last_trace))
+        assert res[0].hit_tier == "ssd"     # cold: served from SSD
+        late = [r for r in res if r.req_id >= 2]
+        assert all(r.hit_tier == "dram" for r in late), \
+            "prefetch should have promoted the hot entry"
+        assert any(r.prefetch_hit for r in res)
+        assert eng.prefetch_stats["issued"] >= 1
+        assert eng.prefetch_stats["hits"] >= 1
+        assert ctrl.counters["prefetches"] >= 1
+        s = summarize(res)
+        assert s["prefetch_hit_rate"] > 0
+        # promoted hits are cheaper than the cold SSD fetch
+        assert late[-1].load_s < res[0].load_s
+    assert traces[0] == traces[1], "prefetch broke event-trace determinism"
+
+
+def test_prefetch_never_displaces_hotter_entry(runner, contexts, tmp_path):
+    """The promotion guard: a cold SSD entry must not displace a hotter
+    DRAM resident; once the SSD entry is the hotter one, it may."""
+    eng, ctrl = _build(runner, contexts, str(tmp_path), dram_entries=1.0)
+    ssd_key = _warm_two(eng, ctrl, runner, contexts)
+    dram_key = next(c.key for c in contexts[:2] if c.key != ssd_key)
+    # make the DRAM resident hot
+    for i in range(4):
+        ctrl.fetch(dram_key, now=1.0 + i)
+    assert ctrl.promote(ssd_key, now=6.0) is None
+    assert ctrl.lookup(ssd_key) == "ssd"
+    assert ctrl.lookup(dram_key) == "dram"
+    # now make the SSD entry much hotter and retry
+    for i in range(20):
+        ctrl.fetch(ssd_key, now=6.0 + 0.1 * i)
+    transfers = []
+    tr = ctrl.promote(ssd_key, now=8.1, transfers=transfers)
+    assert tr is not None and tr.kind == "promote"
+    assert ctrl.lookup(ssd_key) == "dram"
+    assert ctrl.lookup(dram_key) == "ssd"          # displaced colder entry
+    kinds = [t.kind for t in transfers]
+    assert kinds == ["promote", "demote"]
+    # byte accounting stayed exact through the queued moves
+    for tname, tier in ctrl.tiers.items():
+        metas = [m for m in ctrl.meta.values() if m.tier == tname]
+        assert tier.used_bytes == sum(m.nbytes for m in metas)
+
+
+# ---------------------------------------------------------------------------
+# continuous-batcher lane regressions
+# ---------------------------------------------------------------------------
+
+def _lane_view(arr, g, lane):
+    a = np.asarray(arr)
+    return a[g, lane] if g is not None else a[lane]
+
+
+def test_write_lane_touches_only_target_lane(runner, contexts, monkeypatch):
+    tm = TimeModel(get_config(FULL), A100, N_ACTIVE)
+    batcher = ContinuousBatcher(runner.model, runner.params, tm, n_slots=3,
+                                capacity=256)
+    cfg = runner.model.cfg
+    kv = runner.prefill_entry(contexts[0].tokens)
+    before = {}
+    for i, kind, (sect, j, g) in _layer_cache_refs(batcher.cache, cfg):
+        blk = batcher.cache[sect][j]["self"]
+        for name in ("k", "v"):
+            before[(i, name)] = {lane: _lane_view(blk[name], g, lane).copy()
+                                 for lane in range(3)}
+
+    def boom(*a, **k):
+        raise AssertionError("_write_lane must not round-trip the whole "
+                             "cache through jax.tree.map")
+
+    monkeypatch.setattr(jax.tree, "map", boom)
+    n_kept = batcher._write_lane(1, kv)
+    monkeypatch.undo()
+    assert n_kept == len(contexts[0].tokens)
+
+    hd = cfg.resolved_head_dim
+    ai = 0
+    for i, kind, (sect, j, g) in _layer_cache_refs(batcher.cache, cfg):
+        blk = batcher.cache[sect][j]["self"]
+        for name in ("k", "v"):
+            # untouched lanes are bit-identical
+            for lane in (0, 2):
+                np.testing.assert_array_equal(
+                    _lane_view(blk[name], g, lane), before[(i, name)][lane])
+        np.testing.assert_allclose(
+            _lane_view(blk["k"], g, 1)[:n_kept],
+            kv["k"][ai].reshape(n_kept, -1, hd), rtol=1e-6, atol=1e-6)
+        ai += 1
+
+
+def test_capacity_truncation_is_flagged(runner, contexts):
+    tm = TimeModel(get_config(FULL), A100, N_ACTIVE)
+    batcher = ContinuousBatcher(runner.model, runner.params, tm, n_slots=1,
+                                capacity=256)
+    ctx = contexts[0]
+    kv = runner.prefill_entry(ctx.tokens)
+    n_ctx = len(ctx.tokens)
+    # question longer than the remaining capacity: lane runs out of cache
+    # slots mid-question -> no real TTFT exists
+    question = np.arange(1, 300 - n_ctx + 8, dtype=np.int64) % 50 + 1
+    req = Request(0, ctx.key, question, 0.0, ctx.task_type, 4)
+    batcher.admit(0, req, kv, n_ctx, now=0.0)
+    t, out = 0.0, []
+    while not out:
+        out, dt = batcher.tick(t)
+        t += dt
+    assert out[0].truncated
+    assert len(out[0].tokens) < req.max_new_tokens
+
+    # an answer that completes within capacity is NOT truncated
+    req2 = Request(1, ctx.key, ctx.probes[0], 0.0, ctx.task_type, 4)
+    batcher.admit(0, req2, kv, n_ctx, now=t)
+    out2 = []
+    while not out2:
+        out2, dt = batcher.tick(t)
+        t += dt
+    assert not out2[0].truncated
+
+
+def test_summarize_excludes_truncated_from_ttft():
+    def rr(req_id, ttft, truncated):
+        return RequestResult(req_id, "c", "qa", 0.0, ttft, 0.0, 0.0, 0.0,
+                             None, "none", 1.0, 1.0, [1],
+                             truncated=truncated)
+    s = summarize([rr(0, 0.2, False), rr(1, 99.0, True)])
+    assert s["ttft_mean_s"] == pytest.approx(0.2)    # fabricated excluded
+    assert s["ttft_p99_s"] == pytest.approx(0.2)
+    assert s["truncated_rate"] == pytest.approx(0.5)
+    # all-truncated degenerate case still yields finite aggregates
+    s2 = summarize([rr(0, 1.0, True)])
+    assert s2["ttft_mean_s"] == pytest.approx(1.0)
+    assert s2["truncated_rate"] == 1.0
+
+
+def test_summarize_write_back_breakdown_hand_computed():
+    def rr(req_id, tier, wq, wx, wait):
+        return RequestResult(req_id, "c", "qa", 0.0, 0.5, 0.1, 0.2, 0.0,
+                             tier, "none", 1.0, 1.0, [1], wb_queue_s=wq,
+                             wb_transfer_s=wx, write_wait_s=wait)
+    s = summarize([rr(0, None, 0.04, 0.10, 0.0),      # miss, owned insert
+                   rr(1, None, 0.0, 0.0, 0.0),        # coalesced miss
+                   rr(2, "dram", 0.0, 0.0, 0.06)])    # fenced hit
+    # per OWNED insert: the coalesced miss must not dilute the mean
+    assert s["wb_queue_mean_s"] == pytest.approx(0.04)
+    assert s["wb_transfer_mean_s"] == pytest.approx(0.10)
+    assert s["write_wait_mean_s"] == pytest.approx(0.02)  # over all

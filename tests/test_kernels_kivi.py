@@ -9,6 +9,8 @@ import pytest
 from repro.kernels.kivi import kernel as kk
 from repro.kernels.kivi import ref as kr
 
+pytestmark = pytest.mark.slow        # Pallas interpret-mode sweeps
+
 RNG = np.random.RandomState(0)
 
 

@@ -88,6 +88,32 @@ def test_lru_policy_evicts_oldest(tmp_path):
     assert c.lookup("e0") is None
 
 
+def test_reinsert_after_eviction_preserves_history(tmp_path):
+    """Regression: re-inserting a key whose meta survived eviction
+    (tier is None) must keep its hits/last_hit history and EWMA state —
+    the utility ranking runs on them — instead of silently rebuilding a
+    fresh EntryMeta."""
+    c, clock = build(policy=("none", 1.0), dram_mb=1, ssd_mb=1,
+                     tmp=str(tmp_path))
+    c.insert("x", make_kv(), "qa")
+    clock[0] += 1
+    c.fetch("x")
+    clock[0] += 1
+    c.fetch("x")
+    assert c.meta["x"].hits == 2
+    from repro.core.policy import Move
+    c.executor.apply(Move("x", "evict", c.meta["x"].tier), c.meta["x"])
+    assert c.lookup("x") is None and "x" in c.meta
+    last_hit = c.meta["x"].last_hit
+    clock[0] += 1
+    c.insert("x", make_kv(), "qa")
+    m = c.meta["x"]
+    assert m.tier is not None
+    assert m.hits == 2                      # history survived the round trip
+    assert m.last_hit == last_hit
+    assert c.freq._rate["x"] > c.freq.prior_hz   # EWMA not reset to prior
+
+
 def test_ssd_crc_detection(tmp_path):
     from repro.core.compression.base import CompressedEntry
     tier = SSDTier(DeviceSpec("ssd", 1 << 30, 1e9, 1e9), root=str(tmp_path))
