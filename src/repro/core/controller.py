@@ -18,6 +18,14 @@ use defaults to wall time. One controller may be shared by N engine
 replicas — all state (tiers, meta, estimators) is global to the
 hierarchy while fetch *contention* is modeled engine-side per tier.
 
+Topology awareness: constructed with a ``StorageTopology`` whose DRAM is
+split per replica, ``insert``/``fetch``/``promote`` take the acting
+replica. Inserts stamp ``meta.home_replica`` so the policy's expanded
+MCKP (one knapsack choice per replica DRAM) prices sibling placements
+with the replica-to-replica copy; fetches of entries resident in a
+sibling's DRAM report ``remote``/``xlink_delay_s`` and count in
+``hit_remote``; promotions target the acting replica's own DRAM.
+
 Decision vs movement: every state-changing call is an *instantaneous
 placement decision* on the data plane (bytes land immediately, so byte
 conservation is exact at every event), while the *time cost* of each
@@ -48,6 +56,7 @@ from repro.core.estimator import (
 from repro.core.executor import Executor
 from repro.core.policy import AdaptivePolicy, BasePolicy, Placement
 from repro.storage.tier import Tier
+from repro.storage.topology import StorageTopology
 
 
 class SimClock:
@@ -89,10 +98,15 @@ class FetchResult:
     load_delay_s: float
     decompress_delay_s: float
     nbytes: int
+    # topology: the entry lived in a SIBLING replica's DRAM — the hit
+    # pays the replica-to-replica copy on top of the owner's read path
+    remote: bool = False
+    xlink_delay_s: float = 0.0
 
     @property
     def total_delay_s(self) -> float:
-        return self.load_delay_s + self.decompress_delay_s
+        return self.load_delay_s + self.xlink_delay_s \
+            + self.decompress_delay_s
 
 
 class AdaptCacheController:
@@ -100,7 +114,8 @@ class AdaptCacheController:
                  tier_order: Sequence[str], policy: BasePolicy,
                  delay_profile: DelayProfile,
                  freq: FrequencyEstimator,
-                 clock=time.monotonic):
+                 clock=time.monotonic,
+                 topology: Optional[StorageTopology] = None):
         self.methods = methods
         self.tiers = tiers
         self.tier_order = list(tier_order)
@@ -108,10 +123,11 @@ class AdaptCacheController:
         self.delay_profile = delay_profile
         self.freq = freq
         self.clock = clock
+        self.topology = topology
         self.executor = Executor(methods, tiers, tier_order)
         self.meta: Dict[str, EntryMeta] = {}
         self.counters = {"hits": 0, "misses": 0, "inserts": 0,
-                         "prefetches": 0,
+                         "prefetches": 0, "hit_remote": 0,
                          **{f"hit_{t}": 0 for t in tier_order}}
 
     # -- public API -----------------------------------------------------------
@@ -121,7 +137,8 @@ class AdaptCacheController:
 
     def insert(self, key: str, kv: KVData, task_type: str,
                now: Optional[float] = None,
-               transfers: Optional[List[Transfer]] = None) -> Placement:
+               transfers: Optional[List[Transfer]] = None,
+               replica: Optional[int] = None) -> Placement:
         now = self.clock() if now is None else now
         old = self.meta.get(key)
         if old is not None and old.tier:
@@ -137,12 +154,13 @@ class AdaptCacheController:
             meta.orig_bytes = kv_nbytes(kv)
             meta.redundancy = redundancy_feature(kv)
             meta.created_at = now
+            meta.home_replica = replica
         else:
             meta = EntryMeta(key=key, task_type=task_type,
                              n_tokens=kv_num_tokens(kv),
                              orig_bytes=kv_nbytes(kv),
                              redundancy=redundancy_feature(kv),
-                             created_at=now)
+                             created_at=now, home_replica=replica)
         placement = self.policy.admit(meta, kv)
         self.executor.store(meta, kv, placement)
         self.meta[key] = meta
@@ -154,8 +172,8 @@ class AdaptCacheController:
         self._enforce(placement.tier, now, transfers=transfers)
         return placement
 
-    def fetch(self, key: str, now: Optional[float] = None
-              ) -> Optional[FetchResult]:
+    def fetch(self, key: str, now: Optional[float] = None,
+              replica: Optional[int] = None) -> Optional[FetchResult]:
         now = self.clock() if now is None else now
         meta = self.meta.get(key)
         if meta is None or meta.tier is None:
@@ -165,13 +183,21 @@ class AdaptCacheController:
         kv, entry = self.executor.fetch(meta)
         load = tier.load_delay(meta.nbytes)
         dec = self.delay_profile.decompress_delay(meta.method, meta.nbytes)
+        # cross-replica hit: the bytes live in a sibling replica's DRAM —
+        # the fetch pays the owner's read path PLUS the replica link
+        remote = (self.topology is not None
+                  and not self.topology.is_local_hit(meta.tier, replica))
+        xlink = self.topology.cross_delay(meta.nbytes) if remote else 0.0
         meta.hits += 1
         meta.last_hit = now
         self.freq.on_hit(key, now)
         self.counters["hits"] += 1
         self.counters[f"hit_{meta.tier}"] += 1
+        if remote:
+            self.counters["hit_remote"] += 1
         return FetchResult(kv, meta.tier, meta.method, meta.rate,
-                           load, dec, meta.nbytes)
+                           load, dec, meta.nbytes, remote=remote,
+                           xlink_delay_s=xlink)
 
     # -- speculative prefetch ---------------------------------------------------
     def prefetch_candidates(self, now: Optional[float] = None,
@@ -180,29 +206,41 @@ class AdaptCacheController:
         """Slow-tier resident keys ranked by predicted hit rate (hottest
         first), filtered to rates >= ``min_hz``. The engine walks this
         list and lets ``promote`` decide per key whether displacement is
-        safe."""
+        safe. Only slow-LEVEL residents qualify: an entry in a sibling
+        replica's DRAM is already one link away and must not ping-pong
+        between replica DRAMs via the prefetcher."""
         now = self.clock() if now is None else now
-        fast = self.tier_order[0]
-        cands = [(self.freq.predict(m.key, now), m.key)
-                 for m in self.meta.values()
-                 if m.tier is not None and m.tier != fast]
+        if self.topology is not None:
+            slow = [m for m in self.meta.values()
+                    if m.tier is not None
+                    and self.topology.level(m.tier) > 0]
+        else:
+            fast = self.tier_order[0]
+            slow = [m for m in self.meta.values()
+                    if m.tier is not None and m.tier != fast]
+        cands = [(self.freq.predict(m.key, now), m.key) for m in slow]
         return [k for f, k in sorted(cands, key=lambda t: (-t[0], t[1]))
                 if f >= min_hz][:limit]
 
     def promote(self, key: str, now: Optional[float] = None,
-                transfers: Optional[List[Transfer]] = None
-                ) -> Optional[Transfer]:
-        """Speculatively move a slow-tier entry into the fastest tier.
+                transfers: Optional[List[Transfer]] = None,
+                dst_tier: Optional[str] = None) -> Optional[Transfer]:
+        """Speculatively move a slow-tier entry into a fast tier
+        (``dst_tier``; default the global fastest — per-replica setups
+        pass the promoting replica's own DRAM).
 
         Declines (returns None) unless the entry fits in free fast-tier
         space plus space held by strictly-colder residents — a prefetch
         must never evict an entry hotter than the one being promoted.
         """
         now = self.clock() if now is None else now
-        fast = self.tier_order[0]
+        fast = self.tier_order[0] if dst_tier is None else dst_tier
         meta = self.meta.get(key)
         if meta is None or meta.tier is None or meta.tier == fast:
             return None
+        if (self.topology is not None
+                and self.topology.level(meta.tier) == 0):
+            return None     # no sideways DRAM->DRAM moves via prefetch
         if meta.nbytes > self.tiers[fast].spec.capacity_bytes:
             return None
         need = meta.nbytes - self.tiers[fast].free_bytes
@@ -271,6 +309,8 @@ class AdaptCacheController:
         out.update(self.executor.stats)
         out["lookup_total"] = total
         out["hit_rate"] = self.counters["hits"] / total if total else 0.0
+        out["hit_rate_remote"] = (self.counters["hit_remote"] / total
+                                  if total else 0.0)
         for t in self.tier_order:
             out[f"hit_rate_{t}"] = (self.counters[f"hit_{t}"] / total
                                     if total else 0.0)

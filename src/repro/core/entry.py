@@ -14,10 +14,14 @@ class EntryMeta:
     redundancy: float               # estimator feature in [0, 1]
     created_at: float
     # current placement
-    tier: Optional[str] = None      # "dram" | "ssd" | None (evicted)
+    tier: Optional[str] = None      # "dram" | "dram:<r>" | "ssd" | None
     method: str = "none"
     rate: float = 1.0
     nbytes: int = 0
+    # locality: the replica whose requests created (and mostly hit) this
+    # entry — per-replica DRAM placement prices cross-replica copies for
+    # any other replica's DRAM; None means topology-blind (shared DRAM)
+    home_replica: Optional[int] = None
     # stats
     hits: int = 0
     last_hit: float = 0.0

@@ -18,6 +18,13 @@ which is exactly the paper's (U(i,m) − U(i,n)) / (size(i)·(m−n)) with our
 size bookkeeping. FixedPolicy implements the baselines (no-compression LRU,
 KIVI LRU, StreamingLLM LRU) on the same machinery so the comparison is
 apples-to-apples.
+
+Under a split-DRAM ``StorageTopology`` the knapsack's choice set expands
+from {DRAM, SSD, evict} x codec to one choice per REPLICA DRAM: the
+delay term of a sibling replica's DRAM includes the replica-to-replica
+copy every home-replica hit would pay, so admission prefers the home
+DRAM, spills into sibling DRAM while the link beats the SSD, and
+demotes to the shared SSD after that.
 """
 from __future__ import annotations
 
@@ -29,6 +36,7 @@ from repro.core.compression.base import CompressionMethod, KVData
 from repro.core.entry import EntryMeta
 from repro.core.estimator import DelayProfile, FrequencyEstimator, QualityEstimator
 from repro.storage.tier import Tier
+from repro.storage.topology import StorageTopology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,7 +68,19 @@ class Placement:
 
 
 class BasePolicy:
-    """Interface used by the controller."""
+    """Interface used by the controller.
+
+    Policies constructed with a ``StorageTopology`` see the expanded
+    placement space: the knapsack choices per entry are
+    {each replica's DRAM, shared SSD, evict} x codec, and a placement in
+    a *sibling* replica's DRAM is priced with the replica-to-replica
+    copy every cross-replica hit pays (``meta.home_replica`` names the
+    replica whose requests hit the entry). Without a topology the
+    legacy linear ``tier_order`` semantics apply unchanged.
+    """
+
+    topology: Optional[StorageTopology] = None
+    tier_order: List[str] = []
 
     def admit(self, meta: EntryMeta, kv: KVData) -> Placement:
         raise NotImplementedError
@@ -69,6 +89,21 @@ class BasePolicy:
                   now: float) -> Optional[Move]:
         raise NotImplementedError
 
+    def next_tier(self, tier_name: str) -> Optional[str]:
+        """Demotion target for ``tier_name`` (None: evict-only tier)."""
+        if self.topology is not None:
+            return self.topology.next_tier(tier_name)
+        t_idx = self.tier_order.index(tier_name)
+        return (self.tier_order[t_idx + 1]
+                if t_idx + 1 < len(self.tier_order) else None)
+
+    def home_tier(self, meta: EntryMeta) -> Optional[str]:
+        """The DRAM tier local to the entry's home replica, if any."""
+        if (self.topology is None or self.topology.shared_dram
+                or meta.home_replica is None):
+            return None
+        return self.topology.dram_for(meta.home_replica)
+
 
 class AdaptivePolicy(BasePolicy):
     """The paper's policy."""
@@ -76,7 +111,8 @@ class AdaptivePolicy(BasePolicy):
     def __init__(self, methods: Dict[str, CompressionMethod],
                  tiers: Dict[str, Tier], tier_order: Sequence[str],
                  quality: QualityEstimator, freq: FrequencyEstimator,
-                 delay_profile: DelayProfile, alpha: float = 1.0):
+                 delay_profile: DelayProfile, alpha: float = 1.0,
+                 topology: Optional[StorageTopology] = None):
         self.methods = methods
         self.tiers = tiers
         self.tier_order = list(tier_order)      # fast -> slow
@@ -84,18 +120,30 @@ class AdaptivePolicy(BasePolicy):
         self.freq = freq
         self.delay = delay_profile
         self.alpha = alpha
+        self.topology = topology
 
     # -- utility ------------------------------------------------------------
-    def _delay_term(self, tier_name: str, method: str, nbytes: int) -> float:
+    def _delay_term(self, tier_name: str, method: str, nbytes: int,
+                    home_tier: Optional[str] = None) -> float:
         tier = self.tiers[tier_name]
-        return (tier.load_delay(nbytes)
-                + self.delay.decompress_delay(method, nbytes))
+        d = (tier.load_delay(nbytes)
+             + self.delay.decompress_delay(method, nbytes))
+        # a sibling replica's DRAM serves the home replica's hits only
+        # through the replica-to-replica link — price that copy in
+        if (home_tier is not None and tier_name != home_tier
+                and self.topology is not None
+                and self.topology.level(tier_name) == 0
+                and self.topology.replica_of(tier_name) is not None):
+            d += self.topology.cross_delay(nbytes)
+        return d
 
     def utility(self, meta: EntryMeta, tier_name: str, method: str,
                 rate: float, nbytes: int, now: float) -> float:
         f = self.freq.predict(meta.key, now)
         q = self.quality.predict(meta.task_type, method, rate, meta.redundancy)
-        return f * (self.alpha * q - self._delay_term(tier_name, method, nbytes))
+        return f * (self.alpha * q
+                    - self._delay_term(tier_name, method, nbytes,
+                                       home_tier=self.home_tier(meta)))
 
     def current_utility(self, meta: EntryMeta, now: float) -> float:
         return self.utility(meta, meta.tier, meta.method, meta.rate,
@@ -141,9 +189,7 @@ class AdaptivePolicy(BasePolicy):
     def pick_move(self, tier_name: str, entries: Sequence[EntryMeta],
                   now: float, kv_lookup=None) -> Optional[Move]:
         """Minimal marginal-utility-drop move freeing bytes in tier_name."""
-        t_idx = self.tier_order.index(tier_name)
-        next_tier = (self.tier_order[t_idx + 1]
-                     if t_idx + 1 < len(self.tier_order) else None)
+        next_tier = self.next_tier(tier_name)
         best: Optional[Move] = None
 
         for meta in entries:
@@ -189,28 +235,31 @@ class FixedPolicy(BasePolicy):
     """
 
     def __init__(self, methods: Dict[str, CompressionMethod],
-                 tier_order: Sequence[str], method: str, rate: float):
+                 tier_order: Sequence[str], method: str, rate: float,
+                 topology: Optional[StorageTopology] = None):
         self.methods = methods
         self.tier_order = list(tier_order)
         self.method = method
         self.rate = rate
+        self.topology = topology
 
     def admit(self, meta: EntryMeta, kv: KVData) -> Placement:
         m = self.methods[self.method]
         rate = (m.closest_rate(kv, self.rate)
                 if m.applicable(kv) else 1.0)
         method = self.method if m.applicable(kv) else "none"
-        return Placement(self.tier_order[0], method, rate)
+        # locality-aware LRU: land in the inserting replica's own DRAM
+        tier = self.home_tier(meta) or self.tier_order[0]
+        return Placement(tier, method, rate)
 
     def pick_move(self, tier_name: str, entries: Sequence[EntryMeta],
                   now: float, kv_lookup=None) -> Optional[Move]:
         if not entries:
             return None
         lru = min(entries, key=lambda e: e.last_hit or e.created_at)
-        t_idx = self.tier_order.index(tier_name)
-        if t_idx + 1 < len(self.tier_order):
+        next_tier = self.next_tier(tier_name)
+        if next_tier is not None:
             return Move(lru.key, "demote", tier_name, lru.method, lru.rate,
-                        lru.nbytes, 0.0,
-                        dst_tier=self.tier_order[t_idx + 1])
+                        lru.nbytes, 0.0, dst_tier=next_tier)
         return Move(lru.key, "evict", tier_name, lru.method, lru.rate,
                     lru.nbytes, 0.0)

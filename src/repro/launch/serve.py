@@ -12,6 +12,12 @@ write channels, ``--prefetch N`` enables speculative SSD->DRAM
 promotion; ``--serialized`` selects the legacy blocking loop) and prints
 the TTFT/quality/hit-rate summary with the queue/load/prefill/decode
 and write-back breakdowns.
+
+Topology flags: ``--split-dram`` gives each replica its own DRAM tier
+(locality-aware placement, cross-replica hits pay ``--xlink-gbps``);
+``--half-duplex`` makes the shared SSD's reads and writes draw from one
+bandwidth budget; ``--prefetch-deadline`` suppresses promotions that
+would land after the predicted next hit.
 """
 from __future__ import annotations
 
@@ -28,6 +34,7 @@ from repro.serving.baselines import build_engine, fit_quality_estimator
 from repro.serving.engine import summarize
 from repro.serving.runner import ModelRunner
 from repro.serving.workload import make_contexts, poisson_requests
+from repro.storage.topology import StorageTopology
 from repro.training.data import Pipeline, PipelineConfig
 from repro.training.optimizer import AdamWConfig, wsd_schedule
 from repro.training.train_step import init_train_state, make_train_step
@@ -68,11 +75,25 @@ def main(argv=None) -> int:
                     help="engine replicas sharing one cache hierarchy")
     ap.add_argument("--lanes", type=int, default=2,
                     help="continuous-batching lanes per replica")
+    ap.add_argument("--split-dram", action="store_true",
+                    help="per-replica DRAM tiers (dram:<r>, each with "
+                         "--dram-entries of its own capacity) instead of "
+                         "one shared DRAM tier")
+    ap.add_argument("--half-duplex", action="store_true",
+                    help="SSD reads and writes share one bandwidth "
+                         "budget (single arbitration queue) instead of "
+                         "independent duplex channels")
+    ap.add_argument("--xlink-gbps", type=float, default=8.0,
+                    help="replica-to-replica copy bandwidth for "
+                         "cross-replica DRAM hits (GB/s)")
     ap.add_argument("--prefetch", type=int, default=0, metavar="N",
                     help="max in-flight speculative SSD->DRAM promotions "
                          "(0 disables prefetch)")
     ap.add_argument("--prefetch-min-hz", type=float, default=0.0,
                     help="min predicted hit rate for a prefetch candidate")
+    ap.add_argument("--prefetch-deadline", action="store_true",
+                    help="suppress promotions whose estimated transfer "
+                         "would finish after the predicted next hit")
     ap.add_argument("--serialized", action="store_true",
                     help="use the legacy load-blocking loop (baseline)")
     ap.add_argument("--seed", type=int, default=0)
@@ -95,13 +116,19 @@ def main(argv=None) -> int:
         name, _, r = args.policy.partition(":")
         policy = (name, float(r) if r else 1.0)
 
+    topology = StorageTopology(replicas=args.replicas,
+                               shared_dram=not args.split_dram,
+                               duplex_ssd=not args.half_duplex,
+                               xlink_bps=args.xlink_gbps * 1e9)
     n_active = build_model(full_cfg).active_param_count()
     rig = build_engine(runner, contexts, full_cfg, n_active, policy=policy,
                        alpha=args.alpha, dram_entries=args.dram_entries,
                        ssd_entries=args.ssd_entries,
                        n_replicas=args.replicas, n_lanes=args.lanes,
                        prefetch_max_inflight=args.prefetch,
-                       prefetch_min_hz=args.prefetch_min_hz)
+                       prefetch_min_hz=args.prefetch_min_hz,
+                       prefetch_deadline=args.prefetch_deadline,
+                       topology=topology)
     if args.fit_estimator and args.policy == "adaptive":
         fit_quality_estimator(rig, contexts)
         print("quality estimator fitted")

@@ -30,6 +30,7 @@ from repro.serving.runner import ModelRunner
 from repro.serving.timemodel import A100, DeviceModel, TimeModel
 from repro.serving.workload import Context
 from repro.storage.tier import DRAMTier, DeviceSpec, SSDTier
+from repro.storage.topology import StorageTopology
 
 PolicySpec = Union[str, Tuple[str, float]]
 
@@ -52,23 +53,37 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
                  n_replicas: int = 1, n_lanes: int = 2,
                  prefetch_max_inflight: int = 0,
                  prefetch_min_hz: float = 0.0,
-                 prefetch_cooldown_s: float = 1.0) -> EngineRig:
+                 prefetch_cooldown_s: float = 1.0,
+                 prefetch_deadline: bool = False,
+                 topology: Optional[StorageTopology] = None) -> EngineRig:
     methods = default_registry()
     smoke_cfg = runner.model.cfg
+    if topology is None:
+        topology = StorageTopology(replicas=n_replicas)
+    elif not topology.shared_dram and topology.replicas != n_replicas:
+        raise ValueError("topology replica count must match n_replicas")
 
     # ---- entry-size scaling: smoke bytes <-> full-scale bytes ----
     avg_tokens = float(np.mean([len(c.tokens) for c in contexts]))
     smoke_entry = max(1.0, avg_tokens * smoke_cfg.kv_bytes_per_token() * 2.0)
     full_entry = avg_tokens * max(full_cfg.kv_bytes_per_token(), 1)
     scale = full_entry / smoke_entry
+    # the replica-to-replica link moves the same smoke-scale bytes the
+    # tiers store, so its bandwidth scales with them
+    topology = dataclasses.replace(topology,
+                                   xlink_bps=topology.xlink_bps / scale)
 
+    # per-replica DRAM: EACH replica brings ``dram_entries`` of its own
+    # host memory (aggregate capacity grows with replicas, as in a real
+    # multi-host deployment); shared DRAM is one global tier as before
     dram_spec = DeviceSpec("dram", int(dram_entries * smoke_entry),
                            16e9 / scale, 16e9 / scale, 20e-6)
     ssd_spec = DeviceSpec("ssd", int(ssd_entries * smoke_entry),
                           1e9 / scale, 1e9 / scale, 100e-6)
-    tiers = {"dram": DRAMTier(dram_spec),
-             "ssd": SSDTier(ssd_spec, root=ssd_root)}
-    order = ["dram", "ssd"]
+    tiers = {name: DRAMTier(dram_spec, name=name)
+             for name in topology.dram_names}
+    tiers["ssd"] = SSDTier(ssd_spec, root=ssd_root)
+    order = topology.tier_names
 
     freq = FrequencyEstimator(halflife_s=600.0)
     delay = DelayProfile({m: (bps / scale if np.isfinite(bps) else bps)
@@ -77,26 +92,29 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
 
     if policy == "adaptive":
         pol = AdaptivePolicy(methods, tiers, order, qe, freq, delay,
-                             alpha=alpha)
+                             alpha=alpha, topology=topology)
     elif policy == "prefill":
         # zero-capacity tiers: every request misses -> recompute
-        tiers = {"dram": DRAMTier(DeviceSpec("dram", 0, 16e9, 16e9)),
-                 "ssd": SSDTier(DeviceSpec("ssd", 0, 1e9, 1e9),
-                                root=ssd_root)}
-        pol = FixedPolicy(methods, order, "none", 1.0)
+        tiers = {name: DRAMTier(DeviceSpec("dram", 0, 16e9, 16e9),
+                                name=name)
+                 for name in topology.dram_names}
+        tiers["ssd"] = SSDTier(DeviceSpec("ssd", 0, 1e9, 1e9),
+                               root=ssd_root)
+        pol = FixedPolicy(methods, order, "none", 1.0, topology=topology)
     else:
         mname, rate = policy
-        pol = FixedPolicy(methods, order, mname, rate)
+        pol = FixedPolicy(methods, order, mname, rate, topology=topology)
 
     clock = SimClock()
     ctrl = AdaptCacheController(methods, tiers, order, pol, delay, freq,
-                                clock=clock)
+                                clock=clock, topology=topology)
     tm = TimeModel(full_cfg, device, n_active_params)
     eng = ServingEngine(runner, ctrl, tm, contexts, n_replicas=n_replicas,
                         n_lanes=n_lanes, sim_clock=clock,
                         prefetch_max_inflight=prefetch_max_inflight,
                         prefetch_min_hz=prefetch_min_hz,
-                        prefetch_cooldown_s=prefetch_cooldown_s)
+                        prefetch_cooldown_s=prefetch_cooldown_s,
+                        prefetch_deadline=prefetch_deadline)
     return EngineRig(eng, ctrl, qe, clock)
 
 

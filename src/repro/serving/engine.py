@@ -33,7 +33,20 @@ entries (ranked by ``FrequencyEstimator`` predictions) into DRAM with no
 lane reserved, so a later arrival for that key is a pure DRAM hit. A
 promotion never displaces an entry hotter than the one promoted
 (controller guard), and per-request ``prefetch_hit`` plus engine-level
-``prefetch_stats`` (issued / hits / wasted) attribute the effect.
+``prefetch_stats`` (issued / hits / wasted / suppressed) attribute the
+effect. With ``prefetch_deadline=True`` a promotion is only issued when
+its estimated transfer completes before the FrequencyEstimator's
+predicted next hit — losers are counted as ``suppressed``.
+
+Topology (``StorageTopology`` on the controller): with per-replica DRAM
+tiers, requests route to their replica's DRAM first — an entry resident
+in a SIBLING replica's DRAM is a ``remote_hit`` that pays the
+replica-to-replica link on top of the owner's read channel; inserts
+stamp the home replica so MCKP placement is locality-aware; miss
+coalescing and prefetch are replica-local (each replica promotes into
+its OWN DRAM). With ``duplex_ssd=False`` the shared SSD's reads,
+write-backs, and prefetch transfers all arbitrate in ONE half-duplex
+bandwidth queue instead of the PR-2 independent read/write pair.
 
 TTFT decomposes into queue (lane wait) + load|prefill (I/O / compute
 queueing included) + decode (teacher-forced question steps), reported
@@ -66,8 +79,11 @@ from repro.serving.scheduler import (
     EV_ARRIVAL, EV_LOAD_DONE, EV_PREFILL_DONE, EV_TICK, EV_WRITE_DONE,
     EVENT_NAMES, ContinuousBatcher, EventLoop, LaneSet,
 )
-from repro.serving.timemodel import ComputeChannel, IOChannel, TimeModel
+from repro.serving.timemodel import (
+    ComputeChannel, TimeModel, build_tier_channels,
+)
 from repro.serving.workload import Context, Request
+from repro.storage.topology import StorageTopology
 
 DEFAULT_IO_STREAMS = {"dram": 8, "ssd": 1}
 
@@ -96,15 +112,22 @@ class RequestResult:
     write_wait_s: float = 0.0        # fetch fenced behind an in-flight write
     wb_queue_s: float = 0.0          # this request's insert: write-queue wait
     wb_transfer_s: float = 0.0       # ... and pure write-transfer time
+    remote_hit: bool = False         # entry lived in a sibling replica's
+    #                                  DRAM; load paid the replica link
 
 
 class _Replica(LaneSet):
-    """One engine replica: lane bookkeeping + a private prefill stream."""
+    """One engine replica: lane bookkeeping, a private prefill stream,
+    and replica-LOCAL miss coalescing (two replicas missing on the same
+    context each run their own prefill — coalescing only folds misses
+    that share an accelerator)."""
 
     def __init__(self, idx: int, batcher: ContinuousBatcher):
         super().__init__(batcher)
         self.idx = idx
         self.prefill_chan = ComputeChannel(f"prefill{idx}")
+        # coalesced in-flight prefills: ctx_key -> (kv, done_time)
+        self.inflight: Dict[str, Tuple[Any, float]] = {}
 
 
 class ServingEngine:
@@ -116,11 +139,22 @@ class ServingEngine:
                  sim_clock: Optional[SimClock] = None,
                  prefetch_max_inflight: int = 0,
                  prefetch_min_hz: float = 0.0,
-                 prefetch_cooldown_s: float = 1.0):
+                 prefetch_cooldown_s: float = 1.0,
+                 prefetch_deadline: bool = False):
         if n_replicas < 1 or n_lanes < 1:
             raise ValueError("need at least one replica with one lane")
         self.runner = runner
         self.controller = controller
+        # storage topology: per-replica DRAM routing, cross-replica hit
+        # pricing, half-duplex SSD arbitration. None = PR-2 semantics.
+        self.topology: Optional[StorageTopology] = \
+            getattr(controller, "topology", None)
+        if (self.topology is not None
+                and not self.topology.shared_dram
+                and self.topology.replicas != n_replicas):
+            raise ValueError(
+                f"topology has {self.topology.replicas} replica DRAM "
+                f"tiers but engine runs {n_replicas} replicas")
         self.tm = time_model
         self.contexts: Dict[str, Context] = {c.key: c for c in contexts}
         self.max_new = max_new_tokens
@@ -139,7 +173,13 @@ class ServingEngine:
         self.prefetch_max_inflight = prefetch_max_inflight
         self.prefetch_min_hz = prefetch_min_hz
         self.prefetch_cooldown_s = prefetch_cooldown_s
-        self.prefetch_stats = {"issued": 0, "hits": 0, "wasted": 0}
+        # deadline-aware trigger: only promote when the estimated
+        # transfer lands BEFORE the FrequencyEstimator's predicted next
+        # hit — a promotion that loses the race serves nothing and burns
+        # slow-tier bandwidth. Off by default (PR-2 semantics).
+        self.prefetch_deadline = prefetch_deadline
+        self.prefetch_stats = {"issued": 0, "hits": 0, "wasted": 0,
+                               "suppressed": 0}
         self._ref_cache: Dict[str, List[int]] = {}
         self._prefill_cache: Dict[str, Any] = {}
         self.last_trace: List[Tuple[float, str, Dict[str, Any]]] = []
@@ -182,19 +222,31 @@ class ServingEngine:
         breakdown. Loads and prefills overlap decode (see module doc)."""
         loop = EventLoop()
         trace = self.last_trace = []
-        self.prefetch_stats = {"issued": 0, "hits": 0, "wasted": 0}
-        channels = {
-            name: IOChannel(name, tier.spec.read_bw, tier.spec.latency_s,
-                            self.io_streams.get(name, 1))
-            for name, tier in self.controller.tiers.items()}
-        # duplex: writes (insert write-back, demotions, promotions) queue
-        # on their own per-tier channels, priced by Tier.store_delay
-        wchannels = {
-            name: IOChannel(f"{name}_w", tier.spec.write_bw,
-                            tier.spec.latency_s,
-                            self.io_streams.get(name, 1))
-            for name, tier in self.controller.tiers.items()}
+        topo = self.topology
+        self.prefetch_stats = {"issued": 0, "hits": 0, "wasted": 0,
+                               "suppressed": 0}
+        # per-tier channels: duplex tiers get independent read/write
+        # queues (writes priced by Tier.store_delay); a half-duplex SSD
+        # REUSES its read channel for writes, so serving reads,
+        # write-backs, and prefetch transfers arbitrate in one
+        # shared-budget queue
+        channels, wchannels = build_tier_channels(
+            self.controller.tiers, self.io_streams,
+            duplex_for=lambda name: (topo is None or topo.duplex_ssd
+                                     or StorageTopology.level(name) == 0))
         fast_tier = self.controller.tier_order[0]
+
+        def is_dram(name: Optional[str]) -> bool:
+            if name is None:
+                return False
+            return (StorageTopology.level(name) == 0 if topo is not None
+                    else name == fast_tier)
+
+        def dram_of(rep: "_Replica") -> str:
+            """The DRAM tier a replica promotes into / routes to first."""
+            if topo is None or topo.shared_dram:
+                return fast_tier
+            return topo.dram_for(rep.idx)
         replicas = [
             _Replica(i, ContinuousBatcher(self.runner.model,
                                           self.runner.params, self.tm,
@@ -203,8 +255,6 @@ class ServingEngine:
             for i in range(self.n_replicas)]
         # per-request breakdown records, filled at admission
         pending: Dict[int, Dict[str, Any]] = {}
-        # coalesced in-flight prefills: ctx_key -> (kv, done_time)
-        inflight: Dict[str, Tuple[Any, float]] = {}
         # in-flight writes: key -> sim time its bytes are fully landed;
         # fetches of these keys fence on the transfer
         ready_at: Dict[str, float] = {}
@@ -249,68 +299,115 @@ class ServingEngine:
                 out.append((tr, start - now, done - start))
             return out
 
-        def maybe_prefetch(now: float) -> None:
+        def prefetch_one(now: float, dst: Optional[str]) -> bool:
+            """Try to issue ONE speculative promotion into ``dst``
+            (None: the global fast tier). Returns True when issued."""
+            for key in self.controller.prefetch_candidates(
+                    now=now, limit=8, min_hz=self.prefetch_min_hz):
+                if ready_at.get(key, 0.0) > now:
+                    continue                 # already moving
+                if pf_cooldown.get(key, 0.0) > now:
+                    continue                 # recently bounced / suppressed
+                src = self.controller.lookup(key)
+                if src is None or is_dram(src):
+                    continue
+                if channels[src].queue_depth(now) > 0:
+                    continue                 # channel busy serving
+                if self.prefetch_deadline and not deadline_ok(now, key,
+                                                              src, dst):
+                    continue
+                transfers: List[Transfer] = []
+                tr = self.controller.promote(key, now=now,
+                                             transfers=transfers,
+                                             dst_tier=dst)
+                if tr is None:               # displacement unsafe
+                    continue
+                pf_inflight[0] += 1
+                prefetched[key] = True
+                self.prefetch_stats["issued"] += 1
+                note(now, "prefetch_issue", key=key, src=src,
+                     dst=tr.dst_tier, nbytes=tr.nbytes)
+                book(now, transfers, "prefetch")
+                return True
+            return False
+
+        def deadline_ok(now: float, key: str, src: str,
+                        dst: Optional[str]) -> bool:
+            """Deadline-aware trigger: issue only when the estimated
+            transfer (source read — idle, the caller checked — then the
+            destination write behind whatever that channel already has
+            queued) completes before the predicted next hit. A losing
+            promotion is suppressed and the key cooled down so one slow
+            candidate is counted once per window, not once per event."""
+            dname = dst or fast_tier
+            nb = self.controller.tiers[src].entry_nbytes(key)
+            dst_tier = self.controller.tiers[dname]
+            read_done = now + self.controller.tiers[src].load_delay(nb)
+            est_done = max(read_done, wchannels[dname].next_free(now)) \
+                + dst_tier.store_delay(nb)
+            hz = self.controller.freq.predict(key, now)
+            if hz <= 0.0 or est_done <= now + 1.0 / hz:
+                return True
+            self.prefetch_stats["suppressed"] += 1
+            pf_cooldown[key] = now + self.prefetch_cooldown_s
+            note(now, "prefetch_suppress", key=key, est_done=est_done,
+                 predicted_gap_s=1.0 / hz)
+            return False
+
+        def maybe_prefetch(now: float, rep: Optional[_Replica] = None
+                           ) -> None:
             """Use idle slow-tier read-channel time to promote hot
             SSD-resident entries into DRAM — no lane reserved; a later
-            arrival for the key becomes a pure DRAM hit."""
+            arrival for the key becomes a pure DRAM hit. Prefetch is
+            replica-local under a split-DRAM topology: each replica
+            promotes into its OWN DRAM (``rep`` names the acting
+            replica; None — e.g. a write completion — tries every
+            replica in turn)."""
             if self.prefetch_max_inflight <= 0:
                 return
-            while pf_inflight[0] < self.prefetch_max_inflight:
-                issued = False
-                for key in self.controller.prefetch_candidates(
-                        now=now, limit=8, min_hz=self.prefetch_min_hz):
-                    if ready_at.get(key, 0.0) > now:
-                        continue                 # already moving
-                    if pf_cooldown.get(key, 0.0) > now:
-                        continue                 # recently bounced back
-                    src = self.controller.lookup(key)
-                    if src is None or src == fast_tier:
-                        continue
-                    if channels[src].queue_depth(now) > 0:
-                        continue                 # channel busy serving
-                    transfers: List[Transfer] = []
-                    tr = self.controller.promote(key, now=now,
-                                                 transfers=transfers)
-                    if tr is None:               # displacement unsafe
-                        continue
-                    pf_inflight[0] += 1
-                    prefetched[key] = True
-                    self.prefetch_stats["issued"] += 1
-                    note(now, "prefetch_issue", key=key, src=src,
-                         nbytes=tr.nbytes)
-                    book(now, transfers, "prefetch")
-                    issued = True
-                    break
-                if not issued:
-                    return
+            reps = [rep] if rep is not None else list(replicas)
+            progress = True
+            while pf_inflight[0] < self.prefetch_max_inflight and progress:
+                progress = False
+                for r in reps:
+                    if pf_inflight[0] >= self.prefetch_max_inflight:
+                        break
+                    if prefetch_one(now, dram_of(r)):
+                        progress = True
 
         def dispatch(rep: _Replica, lane: int, req: Request,
                      now: float) -> None:
             ctx = self.contexts[req.context_key]
-            fetched = self.controller.fetch(req.context_key, now=now)
+            fetched = self.controller.fetch(req.context_key, now=now,
+                                            replica=rep.idx)
             if fetched is not None:
                 # fence: the entry's bytes may still be in flight toward
                 # its tier (async insert/demote/promote)
                 start = max(now, ready_at.get(req.context_key, 0.0))
+                # the read is booked on the OWNING tier's channel (a
+                # remote DRAM hit contends with the owner's local reads)
+                # and a cross-replica hit additionally pays the link
                 io_done = channels[fetched.tier].submit(start, fetched.nbytes)
-                done = io_done + fetched.decompress_delay_s
-                pf_hit = (fetched.tier == fast_tier
+                done = io_done + fetched.xlink_delay_s \
+                    + fetched.decompress_delay_s
+                pf_hit = (is_dram(fetched.tier)
                           and prefetched.pop(req.context_key, None)
                           is not None)
                 if pf_hit:
                     self.prefetch_stats["hits"] += 1
                 note(now, "load_issue", req_id=req.req_id,
                      tier=fetched.tier, nbytes=fetched.nbytes,
-                     replica=rep.idx, done=done)
+                     replica=rep.idx, remote=fetched.remote, done=done)
                 loop.push(done, EV_LOAD_DONE,
                           (rep, lane, req, fetched.kv, len(ctx.tokens),
                            now, {"hit_tier": fetched.tier,
                                  "method": fetched.method,
                                  "rate": fetched.rate,
                                  "prefetch_hit": pf_hit,
+                                 "remote_hit": fetched.remote,
                                  "write_wait_s": start - now}))
-            elif req.context_key in inflight:
-                kv, done = inflight[req.context_key]
+            elif req.context_key in rep.inflight:
+                kv, done = rep.inflight[req.context_key]
                 done = max(done, now)
                 note(now, "prefill_coalesce", req_id=req.req_id,
                      replica=rep.idx, done=done)
@@ -320,7 +417,7 @@ class ServingEngine:
                 kv = self._prefill_kv(ctx)
                 done = rep.prefill_chan.submit(
                     now, self.tm.prefill_s(len(ctx.tokens)))
-                inflight[req.context_key] = (kv, done)
+                rep.inflight[req.context_key] = (kv, done)
                 note(now, "prefill_issue", req_id=req.req_id,
                      replica=rep.idx, done=done)
                 loop.push(done, EV_PREFILL_DONE,
@@ -343,7 +440,7 @@ class ServingEngine:
                 rep.waiting.append(req)
                 note(now, "arrival", req_id=req.req_id, replica=rep.idx)
                 issue(rep, now)
-                maybe_prefetch(now)
+                maybe_prefetch(now, rep)
 
             elif kind in (EV_LOAD_DONE, EV_PREFILL_DONE):
                 rep, lane, req, kv, orig_len, issue_t, extra = payload
@@ -352,8 +449,9 @@ class ServingEngine:
                     if isinstance(extra, str):       # owner of the prefill
                         transfers: List[Transfer] = []
                         self.controller.insert(req.context_key, kv, extra,
-                                               now=now, transfers=transfers)
-                        inflight.pop(req.context_key, None)
+                                               now=now, transfers=transfers,
+                                               replica=rep.idx)
+                        rep.inflight.pop(req.context_key, None)
                         booked = book(now, transfers, "insert")
                         for tr, q_s, x_s in booked:
                             if tr.kind == "insert":
@@ -370,7 +468,7 @@ class ServingEngine:
                 note(now, EVENT_NAMES[kind], req_id=req.req_id,
                      replica=rep.idx, lane=lane)
                 rep.ensure_tick(loop, now)
-                maybe_prefetch(now)
+                maybe_prefetch(now, rep)
 
             elif kind == EV_WRITE_DONE:
                 tr, cause = payload
@@ -386,7 +484,7 @@ class ServingEngine:
                 rep = payload
                 done = rep.tick(loop, now)
                 if done is None:            # all lanes idle; chain stopped
-                    maybe_prefetch(now)
+                    maybe_prefetch(now, rep)
                     continue
                 note(now, "tick", replica=rep.idx, finished=len(done),
                      lanes=sum(s.active for s in rep.batcher.slots)
@@ -410,9 +508,10 @@ class ServingEngine:
                         prefetch_hit=rec.get("prefetch_hit", False),
                         write_wait_s=rec.get("write_wait_s", 0.0),
                         wb_queue_s=rec.get("wb_queue_s", 0.0),
-                        wb_transfer_s=rec.get("wb_transfer_s", 0.0)))
+                        wb_transfer_s=rec.get("wb_transfer_s", 0.0),
+                        remote_hit=rec.get("remote_hit", False)))
                 issue(rep, now)
-                maybe_prefetch(now)
+                maybe_prefetch(now, rep)
 
         results.sort(key=lambda r: (r.arrival_s, r.req_id))
         return results
@@ -479,7 +578,9 @@ class ServingEngine:
         return probe
 
 
-def summarize(results: Sequence[RequestResult]) -> Dict[str, float]:
+def summarize(results: Sequence[RequestResult],
+              prefetch_stats: Optional[Dict[str, int]] = None
+              ) -> Dict[str, float]:
     if not results:
         return {"n": 0}
     # truncated lanes carry fabricated TTFTs (capacity ran out
@@ -489,13 +590,19 @@ def summarize(results: Sequence[RequestResult]) -> Dict[str, float]:
     quals = np.array([r.quality for r in results])
     hits = [r for r in results if r.hit_tier is not None]
     n = len(results)
+    # per-replica DRAM tiers ("dram:<r>") all count as DRAM hits; remote
+    # hits (served from a SIBLING replica's DRAM over the link) are also
+    # broken out so topology placement quality is visible
     out = {
         "n": n,
         **percentile_summary("ttft", ttfts),
         "quality_mean": float(quals.mean()),
         "hit_rate": len(hits) / n,
-        "hit_rate_dram": sum(r.hit_tier == "dram" for r in results) / n,
+        "hit_rate_dram": sum(r.hit_tier is not None
+                             and r.hit_tier.startswith("dram")
+                             for r in results) / n,
         "hit_rate_ssd": sum(r.hit_tier == "ssd" for r in results) / n,
+        "remote_hit_rate": sum(r.remote_hit for r in results) / n,
         "queue_mean_s": float(np.mean([r.queue_s for r in results])),
         "load_mean_s": float(np.mean([r.load_s for r in results])),
         "prefill_mean_s": float(np.mean([r.prefill_s for r in results])),
@@ -515,4 +622,8 @@ def summarize(results: Sequence[RequestResult]) -> Dict[str, float]:
             [r.wb_transfer_s for r in results if r.hit_tier is None
              and (r.wb_queue_s > 0 or r.wb_transfer_s > 0)]),
     }
+    if prefetch_stats is not None:
+        # engine-level prefetch counters (issued / hits / wasted /
+        # deadline-suppressed) folded into the summary row
+        out.update({f"prefetch_{k}": v for k, v in prefetch_stats.items()})
     return out

@@ -102,6 +102,38 @@ class IOChannel:
     def queue_depth(self, now: float) -> int:
         return sum(1 for t in self._free_at if t > now)
 
+    def next_free(self, now: float) -> float:
+        """Earliest sim time a new booking could start (peek, no book)."""
+        return max(now, min(self._free_at))
+
+
+def build_tier_channels(tiers, io_streams, duplex_for):
+    """(read, write) ``IOChannel`` maps for a tier dict.
+
+    ``duplex_for(name)`` decides the direction model per tier: duplex
+    tiers get an independent write channel (the PR-2 model); half-duplex
+    tiers REUSE the read channel object for writes, so reads,
+    write-backs, and prefetch transfers all queue on one shared
+    bandwidth budget — the single-queue arbitration real SSDs impose.
+    ``io_streams`` is keyed by tier name with a level-prefix fallback
+    (``dram:1`` falls back to the ``dram`` entry).
+    """
+    def streams(name: str) -> int:
+        return io_streams.get(name,
+                              io_streams.get(name.partition(":")[0], 1))
+
+    channels, wchannels = {}, {}
+    for name, tier in tiers.items():
+        rc = IOChannel(name, tier.spec.read_bw, tier.spec.latency_s,
+                       streams(name))
+        if duplex_for(name):
+            wc = IOChannel(f"{name}_w", tier.spec.write_bw,
+                           tier.spec.latency_s, streams(name))
+        else:
+            wc = rc                      # one pool, both directions
+        channels[name], wchannels[name] = rc, wc
+    return channels, wchannels
+
 
 class ComputeChannel:
     """Single-stream FIFO for a replica's prefill compute: prefills queue

@@ -1,3 +1,4 @@
 from repro.storage.tier import (  # noqa: F401
     DRAMTier, DeviceSpec, PAPER_DRAM, PAPER_SSD, SSDTier, Tier,
 )
+from repro.storage.topology import StorageTopology  # noqa: F401

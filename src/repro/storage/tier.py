@@ -23,7 +23,7 @@ import struct
 import tempfile
 import time
 import zlib
-from typing import Any, Dict, Iterable, Optional
+from typing import Any, Dict, Iterable, Optional, Tuple
 
 import numpy as np
 
@@ -58,14 +58,31 @@ class Tier:
     write-back, MCKP demotions, and prefetch promotions — writes queue
     and contend in simulated time instead of landing instantly.
     ``bytes_written`` counts every byte that entered the tier via
-    ``put`` (duplex write-traffic accounting).
+    ``put`` (write-traffic accounting — under a half-duplex topology
+    these writes share the read direction's bandwidth budget).
+
+    Tier identity is ``(level, replica)``: ``name`` follows the
+    ``StorageTopology`` convention (``dram`` / ``dram:<r>`` / ``ssd``),
+    so a per-replica DRAM tier knows which replica owns it and the
+    shared SSD has no owner.
     """
 
-    def __init__(self, spec: DeviceSpec):
+    def __init__(self, spec: DeviceSpec, name: Optional[str] = None):
         self.spec = spec
+        self.name = spec.name if name is None else name
         self.used_bytes = 0
         self.bytes_written = 0
         self._meta: Dict[str, Dict[str, Any]] = {}
+
+    @property
+    def identity(self) -> "Tuple[int, Optional[int]]":
+        """``(level, replica)`` per the StorageTopology naming scheme."""
+        from repro.storage.topology import StorageTopology
+        return StorageTopology.ident(self.name)
+
+    @property
+    def replica(self) -> Optional[int]:
+        return self.identity[1]
 
     # -- delay model --------------------------------------------------------
     def load_delay(self, nbytes: int) -> float:
@@ -96,8 +113,9 @@ class Tier:
 
 
 class DRAMTier(Tier):
-    def __init__(self, spec: DeviceSpec = PAPER_DRAM):
-        super().__init__(spec)
+    def __init__(self, spec: DeviceSpec = PAPER_DRAM,
+                 name: Optional[str] = None):
+        super().__init__(spec, name=name)
         self._store: Dict[str, CompressedEntry] = {}
 
     def put(self, key: str, entry: CompressedEntry) -> int:
@@ -138,8 +156,8 @@ class SSDTier(Tier):
 
     def __init__(self, spec: DeviceSpec = PAPER_SSD,
                  root: Optional[str] = None, measure: bool = False,
-                 codec: Optional[int] = None):
-        super().__init__(spec)
+                 codec: Optional[int] = None, name: Optional[str] = None):
+        super().__init__(spec, name=name)
         self.root = root or tempfile.mkdtemp(prefix="adaptcache_ssd_")
         self.measure = measure
         self.codec = _default_codec() if codec is None else codec

@@ -9,12 +9,6 @@ from repro.kernels.kivi import ref as kr
 
 pytestmark = pytest.mark.slow        # Pallas interpret-mode sweeps
 
-# pre-existing environment failure, not a regression: jax 0.4.37's CPU
-# Pallas renamed pltpu.CompilerParams (kernel targets TPUCompilerParams)
-_PALLAS_XFAIL = pytest.mark.xfail(
-    reason="jax 0.4.37 CPU Pallas API mismatch (pltpu.CompilerParams); "
-    "pre-existing since the seed", strict=False)
-
 RNG = np.random.RandomState(1)
 
 
@@ -34,7 +28,6 @@ def build_planes(P, T, hd, bits, kg, vg):
     return q, {k: jnp.stack(v) for k, v in packs.items()}, quants
 
 
-@_PALLAS_XFAIL
 @pytest.mark.parametrize("bits", [2, 4, 8])
 @pytest.mark.parametrize("T,tb", [(256, 128), (512, 256)])
 def test_fused_decode_matches_oracle(bits, T, tb):
@@ -52,7 +45,6 @@ def test_fused_decode_matches_oracle(bits, T, tb):
                                    rtol=1e-4, atol=1e-4)
 
 
-@_PALLAS_XFAIL
 def test_masking_excludes_tail():
     """Entries past cur_len must not affect the output."""
     P, T, hd, bits, kg, vg = 1, 256, 128, 4, 64, 64

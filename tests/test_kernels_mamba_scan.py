@@ -8,12 +8,6 @@ from repro.kernels.mamba_scan import ref as mr
 
 pytestmark = pytest.mark.slow        # Pallas interpret-mode sweeps
 
-# pre-existing environment failure, not a regression: jax 0.4.37's CPU
-# Pallas renamed pltpu.CompilerParams (kernel targets TPUCompilerParams)
-_PALLAS_XFAIL = pytest.mark.xfail(
-    reason="jax 0.4.37 CPU Pallas API mismatch (pltpu.CompilerParams); "
-    "pre-existing since the seed", strict=False)
-
 RNG = np.random.RandomState(3)
 
 
@@ -27,7 +21,6 @@ def make_inputs(B, S, D, N):
     return dt, x, bs, cs, a, h0
 
 
-@_PALLAS_XFAIL
 @pytest.mark.parametrize("S,tc", [(64, 16), (128, 32), (128, 128)])
 @pytest.mark.parametrize("D,dtile", [(128, 128), (256, 128)])
 def test_scan_matches_ref(S, tc, D, dtile):
@@ -42,7 +35,6 @@ def test_scan_matches_ref(S, tc, D, dtile):
                                rtol=1e-4, atol=1e-4)
 
 
-@_PALLAS_XFAIL
 def test_chunk_invariance():
     """Different chunk sizes must give identical results (state handoff)."""
     B, S, D, N = 1, 128, 128, 8
@@ -54,7 +46,6 @@ def test_chunk_invariance():
                                    rtol=1e-5, atol=1e-5)
 
 
-@_PALLAS_XFAIL
 def test_matches_model_mamba_layer():
     """Kernel agrees with the model's jnp mamba_fwd inner scan."""
     import jax

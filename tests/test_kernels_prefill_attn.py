@@ -9,18 +9,11 @@ from repro.kernels.prefill_attn import ref as pr
 
 pytestmark = pytest.mark.slow        # Pallas interpret-mode sweeps
 
-# pre-existing environment failure, not a regression: jax 0.4.37's CPU
-# Pallas renamed pltpu.CompilerParams (kernel targets TPUCompilerParams)
-_PALLAS_XFAIL = pytest.mark.xfail(
-    reason="jax 0.4.37 CPU Pallas API mismatch (pltpu.CompilerParams); "
-    "pre-existing since the seed", strict=False)
-
 RNG = np.random.RandomState(2)
 
 
 @pytest.mark.parametrize("S,qb,kb", [(128, 64, 64), (256, 64, 128),
                                      (256, 256, 256)])
-@_PALLAS_XFAIL
 @pytest.mark.parametrize("dtype", [np.float32])
 def test_flash_matches_ref(S, qb, kb, dtype):
     P, hd = 3, 128
@@ -33,7 +26,6 @@ def test_flash_matches_ref(S, qb, kb, dtype):
                                rtol=1e-4, atol=1e-5)
 
 
-@_PALLAS_XFAIL
 def test_bf16_inputs():
     P, S, hd = 2, 128, 128
     q = jnp.asarray(RNG.randn(P, S, hd), jnp.bfloat16)
@@ -45,7 +37,6 @@ def test_bf16_inputs():
                                rtol=2e-2, atol=2e-2)
 
 
-@_PALLAS_XFAIL
 def test_gqa_ops_wrapper(monkeypatch):
     monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
     from repro.kernels.prefill_attn import ops

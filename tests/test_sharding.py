@@ -126,9 +126,6 @@ _EP_MOE_SNIPPET = textwrap.dedent("""
 """)
 
 
-@pytest.mark.xfail(reason="pre-existing jax 0.4.37 CPU failure (see "
-                   "CHANGES.md PR 2); subprocess EP MoE mismatch",
-                   strict=False)
 def test_ep_moe_matches_plain():
     """shard_map expert-parallel MoE == single-device reference."""
     r = subprocess.run([sys.executable, "-c", _EP_MOE_SNIPPET],
