@@ -5,6 +5,8 @@
   fig1_hitrate        Fig. 1 — hit-rate / load-delay / quality triangle
   fig2_ttft_quality   Fig. 2 — TTFT vs quality Pareto, 3 tasks x 9 policies
   fig3_overlap        —      — event-driven vs serialized loop, SSD-heavy
+  fig6_paging         —      — partial-prefix hits / chunked prefill /
+                               prefix-affinity on a prefix-sharing workload
   tab_alpha_hitrate   §3     — DRAM hit rate vs alpha sweep
   estimator_curves    §2     — offline quality-rate profiling
   kernel_bench        —      — Pallas-op microbenches (CSV contract)
@@ -27,8 +29,9 @@ def main() -> None:
 
     os.makedirs("experiments", exist_ok=True)
     from benchmarks import (estimator_curves, fig1_hitrate,
-                            fig2_ttft_quality, fig3_overlap, kernel_bench,
-                            roofline_bench, tab_alpha_hitrate)
+                            fig2_ttft_quality, fig3_overlap, fig6_paging,
+                            kernel_bench, roofline_bench,
+                            tab_alpha_hitrate)
     suites = [
         ("kernel_bench", kernel_bench.main),
         ("roofline_bench", roofline_bench.main),
@@ -39,6 +42,7 @@ def main() -> None:
             ("fig1_hitrate", fig1_hitrate.main),
             ("fig2_ttft_quality", fig2_ttft_quality.main),
             ("fig3_overlap", fig3_overlap.main),
+            ("fig6_paging", fig6_paging.main),
             ("tab_alpha_hitrate", tab_alpha_hitrate.main),
         ]
     for name, fn in suites:

@@ -128,6 +128,9 @@ class AdaptCacheController:
         self.meta: Dict[str, EntryMeta] = {}
         self.counters = {"hits": 0, "misses": 0, "inserts": 0,
                          "prefetches": 0, "hit_remote": 0,
+                         "page_runs": 0, "page_run_hits": 0,
+                         "page_runs_full": 0, "page_runs_partial": 0,
+                         "page_runs_miss": 0,
                          **{f"hit_{t}": 0 for t in tier_order}}
 
     # -- public API -----------------------------------------------------------
@@ -198,6 +201,23 @@ class AdaptCacheController:
         return FetchResult(kv, meta.tier, meta.method, meta.rate,
                            load, dec, meta.nbytes, remote=remote,
                            xlink_delay_s=xlink)
+
+    def note_page_run(self, n_hit: int, n_pages: int) -> None:
+        """Record one page-granular prefix match (``PagedPrefixCache``):
+        under paging, ``hits``/``misses`` count individual page fetches,
+        so run-level counters keep request-granular stats visible —
+        full/partial/miss runs plus the total pages reused. A run that
+        matched nothing is the paged analogue of a whole-entry miss and
+        counts one ``miss``."""
+        self.counters["page_runs"] += 1
+        self.counters["page_run_hits"] += n_hit
+        if n_hit == 0:
+            self.counters["misses"] += 1
+            self.counters["page_runs_miss"] += 1
+        elif n_hit < n_pages:
+            self.counters["page_runs_partial"] += 1
+        else:
+            self.counters["page_runs_full"] += 1
 
     # -- speculative prefetch ---------------------------------------------------
     def prefetch_candidates(self, now: Optional[float] = None,

@@ -226,12 +226,29 @@ class AdaptivePolicy(BasePolicy):
         return best
 
 
+def _page_depth(key: str) -> int:
+    """Page index of a ``PagedPrefixCache`` key (``pg-<hash>-<i>``);
+    -1 for whole-context entries. Pages of one context are inserted in
+    one burst with equal timestamps, so pure LRU can't order them — a
+    page is only useful while every EARLIER page of its run is resident,
+    so at equal recency the deepest page should leave first."""
+    if not key.startswith("pg-"):
+        return -1
+    _, _, idx = key.rpartition("-")
+    return int(idx) if idx.isdigit() else -1
+
+
 class FixedPolicy(BasePolicy):
     """Baselines: fixed (method, rate) + LRU demotion/eviction.
 
     method='none'          -> Without-Compression baseline
     method='kivi', rate    -> KIVI LRU
     method='streaming_llm' -> StreamingLLM LRU
+
+    Page entries get a recency tie-break: among equally-recent entries
+    the DEEPEST page demotes/evicts first (a partial run keeps its
+    useful prefix). Whole-context entries tie-break exactly as before
+    (insertion order), so non-paged behavior is unchanged.
     """
 
     def __init__(self, methods: Dict[str, CompressionMethod],
@@ -256,7 +273,8 @@ class FixedPolicy(BasePolicy):
                   now: float, kv_lookup=None) -> Optional[Move]:
         if not entries:
             return None
-        lru = min(entries, key=lambda e: e.last_hit or e.created_at)
+        lru = min(entries, key=lambda e: (e.last_hit or e.created_at,
+                                          -_page_depth(e.key)))
         next_tier = self.next_tier(tier_name)
         if next_tier is not None:
             return Move(lru.key, "demote", tier_name, lru.method, lru.rate,

@@ -18,6 +18,13 @@ Topology flags: ``--split-dram`` gives each replica its own DRAM tier
 ``--half-duplex`` makes the shared SSD's reads and writes draw from one
 bandwidth budget; ``--prefetch-deadline`` suppresses promotions that
 would land after the predicted next hit.
+
+Paging flags: ``--paged`` serves page-granular (``--page-tokens`` per
+page) so prefix-sharing requests reuse the matched page run and prefill
+only the suffix; ``--chunk-tokens N`` splits (suffix) prefills into
+N-token chunks interleaved with decode on one unified compute channel
+per replica; ``--affinity`` routes arrivals to the replica whose local
+DRAM holds the longest cached page run (needs ``--split-dram``).
 """
 from __future__ import annotations
 
@@ -94,6 +101,20 @@ def main(argv=None) -> int:
     ap.add_argument("--prefetch-deadline", action="store_true",
                     help="suppress promotions whose estimated transfer "
                          "would finish after the predicted next hit")
+    ap.add_argument("--paged", action="store_true",
+                    help="page-granular serving: store/match fixed-token "
+                         "pages so partial prefix matches skip re-prefill")
+    ap.add_argument("--page-tokens", type=int, default=64,
+                    help="tokens per page in --paged mode")
+    ap.add_argument("--chunk-tokens", type=int, default=0, metavar="N",
+                    help="split (suffix) prefills into N-token chunks "
+                         "interleaved with decode on one unified compute "
+                         "channel per replica (0 = dedicated prefill "
+                         "stream)")
+    ap.add_argument("--affinity", action="store_true",
+                    help="route arrivals to the replica whose local DRAM "
+                         "holds the longest cached page run (requires "
+                         "--split-dram to matter)")
     ap.add_argument("--serialized", action="store_true",
                     help="use the legacy load-blocking loop (baseline)")
     ap.add_argument("--seed", type=int, default=0)
@@ -128,14 +149,23 @@ def main(argv=None) -> int:
                        prefetch_max_inflight=args.prefetch,
                        prefetch_min_hz=args.prefetch_min_hz,
                        prefetch_deadline=args.prefetch_deadline,
-                       topology=topology)
+                       topology=topology,
+                       page_tokens=args.page_tokens if args.paged else 0,
+                       chunk_tokens=args.chunk_tokens,
+                       affinity=args.affinity)
     if args.fit_estimator and args.policy == "adaptive":
         fit_quality_estimator(rig, contexts)
         print("quality estimator fitted")
 
+    if args.serialized and (args.paged or args.chunk_tokens):
+        print("note: --serialized ignores --paged/--chunk-tokens "
+              "(whole-context blocking loop)")
     results = (rig.engine.process_serialized(requests) if args.serialized
                else rig.engine.process(requests))
-    s = summarize(results)
+    s = summarize(results,
+                  chunk_stats=(rig.engine.chunk_stats
+                               if args.chunk_tokens and not args.serialized
+                               else None))
     print("\n=== serving summary ===")
     for k, v in s.items():
         print(f"  {k:16s} {v:.4f}" if isinstance(v, float) else

@@ -55,7 +55,10 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
                  prefetch_min_hz: float = 0.0,
                  prefetch_cooldown_s: float = 1.0,
                  prefetch_deadline: bool = False,
-                 topology: Optional[StorageTopology] = None) -> EngineRig:
+                 topology: Optional[StorageTopology] = None,
+                 page_tokens: int = 0,
+                 chunk_tokens: int = 0,
+                 affinity: bool = False) -> EngineRig:
     methods = default_registry()
     smoke_cfg = runner.model.cfg
     if topology is None:
@@ -114,7 +117,9 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
                         prefetch_max_inflight=prefetch_max_inflight,
                         prefetch_min_hz=prefetch_min_hz,
                         prefetch_cooldown_s=prefetch_cooldown_s,
-                        prefetch_deadline=prefetch_deadline)
+                        prefetch_deadline=prefetch_deadline,
+                        page_tokens=page_tokens, chunk_tokens=chunk_tokens,
+                        affinity=affinity)
     return EngineRig(eng, ctrl, qe, clock)
 
 

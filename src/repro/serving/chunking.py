@@ -6,25 +6,38 @@ rolling prefix hash, so a request whose context shares only a PREFIX with
 a cached one still loads the matched pages and prefills just the suffix.
 
     keys = chain_hash(pages of 256 tokens)       # key_i commits to pages<=i
-    match_prefix(tokens) -> longest cached page run
-    split_kv / join_kv                           # KVData <-> page KVData
+    match_prefix(tokens) -> FetchPlan            # longest cached page run
+    split_kv / join_kv / tail_kv                 # KVData <-> page KVData
 
 Pages are ordinary AdaptCache entries: the policy compresses/places/evicts
 each page independently (popular early pages of a hot document stay in
 DRAM at high quality; deep-tail pages compress harder or spill to SSD —
 finer-grained utility than whole-context entries, a beyond-paper
 extension).
+
+``match_prefix`` is a *planner*, not a loader: it returns one
+``PageFetch`` per matched page (owning tier, bytes, cross-replica link
+and decompress prices) so the serving engine can book each page read on
+the owning tier's ``IOChannel`` — partial-prefix loads contend with
+write-back and prefetch traffic like every other byte movement. The
+synchronous ``total_delay_s`` sum is kept as a property for the
+serialized baseline and unit tests.
+
+Non-token arrays (SSM states) summarize the whole prefix and cannot be
+paged — they ride the sub-page remainder, which is NOT stored.
+``insert_context`` therefore reports kept/remainder token counts (and
+whether state was dropped) so callers account for suffix re-prefill.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.compression.base import KVData
-from repro.core.controller import AdaptCacheController, FetchResult
+from repro.core.controller import AdaptCacheController, FetchResult, Transfer
 
 PAGE_TOKENS = 256
 TOKEN_ARRAYS = ("k", "v", "ckv", "krope", "positions")
@@ -62,38 +75,111 @@ def split_kv(kv: KVData, page_tokens: int = PAGE_TOKENS
             elif name in TOKEN_ARRAYS:
                 page[name] = np.ascontiguousarray(a[:, lo:hi])
         pages.append(page)
-    rem: KVData = {}
-    for name, a in kv.items():
-        if name == "positions":
-            rem[name] = np.asarray(a[n_pages * page_tokens:])
-        elif name in TOKEN_ARRAYS:
-            rem[name] = np.ascontiguousarray(a[:, n_pages * page_tokens:])
-        else:
-            rem[name] = np.asarray(a)          # ssm state stays whole
+    rem = tail_kv(kv, n_pages * page_tokens)
     return pages, rem
 
 
-def join_kv(pages: Sequence[KVData]) -> KVData:
-    """Concatenate page entries back into one KVData (token order)."""
-    assert pages
+def tail_kv(kv: KVData, start: int) -> KVData:
+    """Slice token arrays from source-token ``start`` on; non-token
+    arrays (whole-prefix SSM state) pass through untouched."""
     out: KVData = {}
-    for name in pages[0]:
+    for name, a in kv.items():
         if name == "positions":
-            out[name] = np.concatenate([p[name] for p in pages])
+            out[name] = np.asarray(a[start:])
         elif name in TOKEN_ARRAYS:
-            out[name] = np.concatenate([p[name] for p in pages], axis=1)
+            out[name] = np.ascontiguousarray(a[:, start:])
         else:
-            out[name] = pages[-1][name]
+            out[name] = np.asarray(a)          # ssm state stays whole
     return out
 
 
+def join_kv(pages: Sequence[KVData]) -> KVData:
+    """Concatenate page entries back into one KVData (token order).
+
+    Token arrays concatenate over the pieces that carry them; non-token
+    arrays (SSM state — whole-prefix summaries) are taken from the LAST
+    piece holding one, so ``join_kv(pages + [remainder])`` reconstructs
+    the original entry including state that only lives in the remainder."""
+    assert pages
+    names = []
+    for p in pages:
+        for name in p:
+            if name not in names:
+                names.append(name)
+    out: KVData = {}
+    for name in names:
+        parts = [p[name] for p in pages if name in p]
+        if name == "positions":
+            out[name] = np.concatenate(parts)
+        elif name in TOKEN_ARRAYS:
+            out[name] = np.concatenate(parts, axis=1)
+        else:
+            out[name] = parts[-1]
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class PageFetch:
+    """One matched page of a prefix run: everything the engine needs to
+    book the read on the owning tier's channel."""
+    key: str
+    tier: str
+    nbytes: int
+    method: str
+    rate: float
+    kv: KVData
+    remote: bool                     # owned by a sibling replica's DRAM
+    xlink_delay_s: float
+    decompress_delay_s: float
+    load_delay_s: float              # unqueued tier read estimate
+
+    @property
+    def total_delay_s(self) -> float:
+        return self.load_delay_s + self.xlink_delay_s \
+            + self.decompress_delay_s
+
+
 @dataclasses.dataclass
-class PrefixMatch:
-    n_pages: int
+class FetchPlan:
+    """Longest-cached-prefix fetch plan for one request.
+
+    ``src_tokens`` is the SOURCE-token coverage (n_pages * page_tokens):
+    the suffix to prefill starts there. ``n_tokens`` counts the rows the
+    matched pages actually kept (lossy pages shrink)."""
+    pages: List[PageFetch]
+    src_tokens: int
     n_tokens: int
     kv: Optional[KVData]            # joined matched pages (decompressed)
-    load_delay_s: float
-    tiers: List[str]
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.pages)
+
+    @property
+    def total_delay_s(self) -> float:
+        """Serialized (unqueued) page-load sum — the legacy synchronous
+        cost; the event engine books pages on channels instead."""
+        return sum(p.total_delay_s for p in self.pages)
+
+    @property
+    def tiers(self) -> List[str]:
+        return [p.tier for p in self.pages]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(p.nbytes for p in self.pages)
+
+
+@dataclasses.dataclass(frozen=True)
+class InsertOutcome:
+    """What ``insert_context`` stored vs dropped."""
+    inserted: int                    # pages newly admitted this call
+    pages: int                       # total pages the context splits into
+    kept_tokens: int                 # source tokens covered by pages
+    remainder_tokens: int            # sub-page suffix NOT stored — callers
+    #                                  must re-prefill it on every match
+    dropped_state: bool              # the remainder carried non-token
+    #                                  (SSM) arrays that were discarded
 
 
 class PagedPrefixCache:
@@ -105,32 +191,81 @@ class PagedPrefixCache:
         self.page_tokens = page_tokens
 
     def insert_context(self, tokens: np.ndarray, kv: KVData,
-                       task_type: str, now: Optional[float] = None) -> int:
-        keys = page_keys(tokens, self.page_tokens)
-        pages, _rem = split_kv(kv, self.page_tokens)
-        n = 0
-        for key, page in zip(keys, pages):
-            if self.controller.lookup(key) is None:
-                self.controller.insert(key, page, task_type, now=now)
-                n += 1
-        return n
+                       task_type: str, now: Optional[float] = None,
+                       transfers: Optional[List[Transfer]] = None,
+                       replica: Optional[int] = None,
+                       keys: Optional[List[str]] = None) -> InsertOutcome:
+        """Admit the pageable prefix of ``kv`` as page entries.
+
+        Pages are stamped with the inserting replica (``home_replica``)
+        so topology-aware placement keeps a document's page run local to
+        the replica that prefilled it; page write-backs are emitted into
+        ``transfers`` like any other insert. The sub-page remainder —
+        including any SSM state, which only lives there — is NOT stored;
+        the returned ``InsertOutcome`` reports exactly how many tokens
+        were kept vs left for suffix re-prefill."""
+        keys = page_keys(tokens, self.page_tokens) if keys is None else keys
+        t_kv = kv["k" if "k" in kv else "ckv"].shape[1] if (
+            "k" in kv or "ckv" in kv) else 0
+        n_pages = t_kv // self.page_tokens
+        # residency check BEFORE slicing: the common warm path (every
+        # page already cached, only the remainder re-prefilled) must not
+        # pay an O(context bytes) split/copy just to discard it
+        missing = [i for i in range(min(n_pages, len(keys)))
+                   if self.controller.lookup(keys[i]) is None]
+        if missing:
+            pages, _rem = split_kv(kv, self.page_tokens)
+            for i in missing:
+                self.controller.insert(keys[i], pages[i], task_type,
+                                       now=now, transfers=transfers,
+                                       replica=replica)
+        return InsertOutcome(
+            inserted=len(missing), pages=n_pages,
+            kept_tokens=n_pages * self.page_tokens,
+            remainder_tokens=t_kv - n_pages * self.page_tokens,
+            dropped_state=any(name not in TOKEN_ARRAYS for name in kv))
 
     def match_prefix(self, tokens: np.ndarray,
-                     now: Optional[float] = None) -> PrefixMatch:
-        keys = page_keys(tokens, self.page_tokens)
-        fetched: List[FetchResult] = []
+                     now: Optional[float] = None,
+                     replica: Optional[int] = None,
+                     keys: Optional[List[str]] = None) -> FetchPlan:
+        """Plan the longest cached page run for ``tokens``.
+
+        Each resident page is fetched through the controller (hit
+        accounting, frequency updates, remote-hit pricing for pages homed
+        on a sibling replica's DRAM) and reported as a ``PageFetch``; the
+        run stops at the first non-resident page. The caller books the
+        page reads on the owning tiers' I/O channels."""
+        keys = page_keys(tokens, self.page_tokens) if keys is None else keys
+        fetched: List[Tuple[str, FetchResult]] = []
         for key in keys:
             if self.controller.lookup(key) is None:
                 break
-            r = self.controller.fetch(key, now=now)
+            r = self.controller.fetch(key, now=now, replica=replica)
             if r is None:
                 break
-            fetched.append(r)
+            fetched.append((key, r))
+        self.controller.note_page_run(len(fetched), len(keys))
         if not fetched:
-            return PrefixMatch(0, 0, None, 0.0, [])
-        kv = join_kv([f.kv for f in fetched])
+            return FetchPlan([], 0, 0, None)
+        kv = join_kv([f.kv for _, f in fetched])
         # dropped pages shrink; count ACTUAL kept tokens
         n_tokens = kv["k" if "k" in kv else "ckv"].shape[1]
-        return PrefixMatch(len(fetched), n_tokens, kv,
-                           sum(f.total_delay_s for f in fetched),
-                           [f.tier for f in fetched])
+        pages = [PageFetch(key, f.tier, f.nbytes, f.method, f.rate, f.kv,
+                           f.remote, f.xlink_delay_s, f.decompress_delay_s,
+                           f.load_delay_s)
+                 for key, f in fetched]
+        return FetchPlan(pages, len(fetched) * self.page_tokens,
+                         n_tokens, kv)
+
+    def local_run(self, tokens: np.ndarray, dram_tier: str,
+                  keys: Optional[List[str]] = None) -> int:
+        """Length of the leading page run resident in ``dram_tier`` —
+        the prefix-affinity routing score (no counters touched)."""
+        keys = page_keys(tokens, self.page_tokens) if keys is None else keys
+        run = 0
+        for key in keys:
+            if self.controller.lookup(key) != dram_tier:
+                break
+            run += 1
+        return run

@@ -59,6 +59,38 @@ bit-exact vs the sequential path), so quality attribution is exact. The
 controller's clock is the event clock: ``fetch`` sees issue time,
 ``insert`` sees completion time.
 
+Paged serving (``page_tokens > 0``): contexts are stored as fixed-token
+PAGES (rolling prefix-hash keys, ``serving/chunking.py``) instead of
+whole entries, so a request sharing only a PREFIX with cached traffic
+still reuses the matched page run. ``match_prefix`` returns a fetch
+*plan* — per-page owning tier, bytes, link and decompress prices — and
+the engine books each page read on that tier's ``IOChannel``: partial
+loads contend with write-back and prefetch like every other transfer,
+and pages homed on a sibling replica's DRAM pay the link (per-page
+``remote`` accounting). Only the un-matched suffix is prefilled; the
+fresh pages are inserted (stamped with the prefilling replica) when it
+completes. ``RequestResult`` carries ``pages_hit`` and
+``tokens_reused_frac``.
+
+Chunked prefill (``chunk_tokens > 0``): the dedicated per-replica
+prefill stream is replaced by ONE unified compute channel per replica
+(Sarathi-style). Suffix prefill splits into ``chunk_tokens``-token
+chunks priced by ``TimeModel.chunk_prefill_s``; each chunk and each
+decode tick books the same single-stream channel, so prefill chunks
+interleave with decode steps instead of running on a phantom second
+accelerator (``chunk-done`` events drive the chain; interleave counters
+in ``chunk_stats``). With ``chunk_tokens == 0`` the legacy dedicated
+prefill stream is used unchanged.
+
+Prefix-affinity routing (``affinity=True``): arrivals prefer the
+replica whose LOCAL DRAM holds the longest cached page run for the
+request's context (whole-entry residence when paging is off), falling
+back to least-loaded — attacking the cross-replica hit traffic that
+least-loaded routing produces under split DRAM.
+
+All three features default OFF; the degenerate configuration is
+bit-for-bit the PR-3 event path.
+
 ``process_serialized`` preserves the seed's one-request-at-a-time loop
 (every load blocks the server, inserts land instantly) as the measured
 baseline the event engine is judged against; see
@@ -72,12 +104,16 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.configs.base import LayerKind
 from repro.core.controller import AdaptCacheController, SimClock, Transfer
+from repro.serving.chunking import (
+    PagedPrefixCache, join_kv, page_keys, tail_kv,
+)
 from repro.serving.metrics import percentile_summary, quality_score, safe_mean
 from repro.serving.runner import ModelRunner
 from repro.serving.scheduler import (
-    EV_ARRIVAL, EV_LOAD_DONE, EV_PREFILL_DONE, EV_TICK, EV_WRITE_DONE,
-    EVENT_NAMES, ContinuousBatcher, EventLoop, LaneSet,
+    EV_ARRIVAL, EV_CHUNK_DONE, EV_LOAD_DONE, EV_PREFILL_DONE, EV_TICK,
+    EV_WRITE_DONE, EVENT_NAMES, ContinuousBatcher, EventLoop, LaneSet,
 )
 from repro.serving.timemodel import (
     ComputeChannel, TimeModel, build_tier_channels,
@@ -114,6 +150,32 @@ class RequestResult:
     wb_transfer_s: float = 0.0       # ... and pure write-transfer time
     remote_hit: bool = False         # entry lived in a sibling replica's
     #                                  DRAM; load paid the replica link
+    pages_hit: int = 0               # matched page run length (paged mode)
+    tokens_reused_frac: float = 0.0  # source-token coverage of the run:
+    #                                  1 - (suffix re-prefilled / context)
+
+
+@dataclasses.dataclass
+class _PagedJob:
+    """One in-flight page-granular request: matched-page loads book on
+    the owning tiers' channels, then the un-matched suffix prefills in
+    chunks, then the owner (and any coalesced waiters) admit."""
+    rep: "_Replica"
+    lane: int
+    req: Any
+    ctx: Any
+    kv_final: Any                    # lane content: pages + fresh suffix
+    orig_len: int
+    t_dispatch: float
+    rec: Dict[str, Any]              # hit-attribution fields for pending
+    chunks: List[Tuple[int, int]]    # (n_new_tokens, n_past_tokens)
+    insert_task: Optional[str] = None  # owner stores fresh KV at the end
+    insert_whole: bool = False       # whole-entry insert (chunked-only
+    #                                  mode); False = page inserts
+    ci: int = 0                      # next chunk index
+    t_load_done: float = -1.0        # page loads landed (-1: no pages)
+    waiters: List[Tuple[int, Any, float]] = dataclasses.field(
+        default_factory=list)        # coalesced: (lane, req, t_coalesce)
 
 
 class _Replica(LaneSet):
@@ -140,7 +202,10 @@ class ServingEngine:
                  prefetch_max_inflight: int = 0,
                  prefetch_min_hz: float = 0.0,
                  prefetch_cooldown_s: float = 1.0,
-                 prefetch_deadline: bool = False):
+                 prefetch_deadline: bool = False,
+                 page_tokens: int = 0,
+                 chunk_tokens: int = 0,
+                 affinity: bool = False):
         if n_replicas < 1 or n_lanes < 1:
             raise ValueError("need at least one replica with one lane")
         self.runner = runner
@@ -180,6 +245,27 @@ class ServingEngine:
         self.prefetch_deadline = prefetch_deadline
         self.prefetch_stats = {"issued": 0, "hits": 0, "wasted": 0,
                                "suppressed": 0}
+        # page-granular serving: contexts stored/matched as fixed-token
+        # pages (0 = whole-context entries, the legacy path). SSM state
+        # summarizes the whole prefix and cannot be paged.
+        if page_tokens > 0 and any(k == LayerKind.MAMBA
+                                   for k in runner.model.cfg.layer_kinds()):
+            raise ValueError(
+                "paged serving requires attention-only models: SSM state "
+                "summarizes the whole prefix and cannot be split into "
+                "pages")
+        self.page_tokens = page_tokens
+        self.paged = (PagedPrefixCache(controller, page_tokens)
+                      if page_tokens > 0 else None)
+        # chunked prefill: suffix prefill splits into chunk_tokens-token
+        # chunks on ONE unified compute channel per replica that decode
+        # ticks also book (0 = dedicated prefill stream, legacy timing)
+        self.chunk_tokens = chunk_tokens
+        self.chunk_stats = {"chunks_issued": 0, "queue_s": 0.0,
+                            "ticks_delayed": 0, "tick_delay_s": 0.0}
+        # prefix-affinity arrival routing (split-DRAM topologies only)
+        self.affinity = affinity
+        self._pkeys: Dict[str, List[str]] = {}
         self._ref_cache: Dict[str, List[int]] = {}
         self._prefill_cache: Dict[str, Any] = {}
         self.last_trace: List[Tuple[float, str, Dict[str, Any]]] = []
@@ -225,6 +311,8 @@ class ServingEngine:
         topo = self.topology
         self.prefetch_stats = {"issued": 0, "hits": 0, "wasted": 0,
                                "suppressed": 0}
+        self.chunk_stats = {"chunks_issued": 0, "queue_s": 0.0,
+                            "ticks_delayed": 0, "tick_delay_s": 0.0}
         # per-tier channels: duplex tiers get independent read/write
         # queues (writes priced by Tier.store_delay); a half-duplex SSD
         # REUSES its read channel for writes, so serving reads,
@@ -253,6 +341,12 @@ class ServingEngine:
                                           n_slots=self.n_lanes,
                                           capacity=self.runner.capacity))
             for i in range(self.n_replicas)]
+        if self.chunk_tokens > 0:
+            # unified compute: decode ticks and prefill chunks share ONE
+            # single-stream channel per replica (see LaneSet.tick)
+            for r in replicas:
+                r.compute_chan = ComputeChannel(f"compute{r.idx}")
+                r.compute_stats = self.chunk_stats
         # per-request breakdown records, filled at admission
         pending: Dict[int, Dict[str, Any]] = {}
         # in-flight writes: key -> sim time its bytes are fully landed;
@@ -375,8 +469,197 @@ class ServingEngine:
                     if prefetch_one(now, dram_of(r)):
                         progress = True
 
+        def pkeys(ctx: Context) -> List[str]:
+            """Page-key chain for a context, hashed once per engine."""
+            if ctx.key not in self._pkeys:
+                self._pkeys[ctx.key] = page_keys(ctx.tokens,
+                                                 self.page_tokens)
+            return self._pkeys[ctx.key]
+
+        def route(req: Request) -> _Replica:
+            """Arrival routing: least-loaded, unless prefix affinity is
+            on under a split-DRAM topology — then prefer the replica
+            whose LOCAL DRAM holds the longest cached page run for the
+            request's context (whole-entry residence when paging is
+            off), tie-broken least-loaded."""
+            base = min(replicas, key=lambda r: (r.occupancy(), r.idx))
+            if (not self.affinity or topo is None or topo.shared_dram
+                    or len(replicas) == 1):
+                return base
+            ctx = self.contexts[req.context_key]
+            if self.paged is not None:
+                keys = pkeys(ctx)
+                best, best_run = base, 0
+                for r in replicas:
+                    run = self.paged.local_run(ctx.tokens, dram_of(r),
+                                               keys=keys)
+                    if run > best_run or (
+                            run == best_run and run > 0
+                            and (r.occupancy(), r.idx)
+                            < (best.occupancy(), best.idx)):
+                        best, best_run = r, run
+                return best
+            tier = self.controller.lookup(req.context_key)
+            owner = (StorageTopology.replica_of(tier)
+                     if tier is not None else None)
+            return replicas[owner] if owner is not None else base
+
+        def issue_chunk(job: _PagedJob, now: float) -> None:
+            """Book the next suffix-prefill chunk. Chunked mode books
+            the replica's unified compute channel (contending with
+            decode ticks); chunking off books the legacy dedicated
+            prefill stream with the monolithic prefill cost."""
+            n_new, n_past = job.chunks[job.ci]
+            if self.chunk_tokens > 0:
+                svc = self.tm.chunk_prefill_s(n_new, n_past)
+                start, end = job.rep.compute_chan.book(now, svc)
+                # interleave counters track the UNIFIED tick only — a
+                # monolithic suffix on the dedicated stream is not a chunk
+                self.chunk_stats["chunks_issued"] += 1
+                self.chunk_stats["queue_s"] += start - now
+            else:
+                svc = self.tm.prefill_s(n_new)
+                start, end = job.rep.prefill_chan.book(now, svc)
+            note(now, "chunk_issue", req_id=job.req.req_id,
+                 replica=job.rep.idx, idx=job.ci, n_new=n_new, done=end)
+            loop.push(end, EV_CHUNK_DONE, job)
+
+        def finish_job(job: _PagedJob, now: float) -> None:
+            """Final chunk (or pure page hit) landed: store the fresh
+            KV, admit the owner and every coalesced waiter."""
+            rep = job.rep
+            rec = dict(job.rec)
+            if job.insert_task is not None:
+                transfers: List[Transfer] = []
+                if job.insert_whole:
+                    self.controller.insert(
+                        job.req.context_key, job.kv_final, job.insert_task,
+                        now=now, transfers=transfers, replica=rep.idx)
+                else:
+                    out = self.paged.insert_context(
+                        job.ctx.tokens, self._prefill_kv(job.ctx),
+                        job.insert_task, now=now, transfers=transfers,
+                        replica=rep.idx, keys=pkeys(job.ctx))
+                    note(now, "page_insert", req_id=job.req.req_id,
+                         inserted=out.inserted, pages=out.pages,
+                         remainder_tokens=out.remainder_tokens)
+                q = x = 0.0
+                for tr, q_s, x_s in book(now, transfers, "insert"):
+                    if tr.kind == "insert":
+                        q, x = q + q_s, x + x_s
+                rec["wb_queue_s"], rec["wb_transfer_s"] = q, x
+            rep.inflight.pop(job.req.context_key, None)
+            t0 = job.t_load_done if job.t_load_done >= 0 else job.t_dispatch
+            rep.admit(job.lane, job.req, job.kv_final, job.orig_len, now)
+            pending[job.req.req_id] = {
+                "queue_s": job.t_dispatch - job.req.arrival_s,
+                "load_s": t0 - job.t_dispatch, "prefill_s": now - t0,
+                **rec, "replica": rep.idx}
+            note(now, "paged_admit", req_id=job.req.req_id,
+                 replica=rep.idx, lane=job.lane)
+            for lane, wreq, t_c in job.waiters:
+                rep.admit(lane, wreq, job.kv_final, job.orig_len, now)
+                pending[wreq.req_id] = {
+                    "queue_s": t_c - wreq.arrival_s, "load_s": 0.0,
+                    "prefill_s": now - t_c, "hit_tier": None,
+                    "method": "none", "rate": 1.0, "replica": rep.idx}
+                note(now, "paged_admit", req_id=wreq.req_id,
+                     replica=rep.idx, lane=lane, coalesced=True)
+            rep.ensure_tick(loop, now)
+            maybe_prefetch(now, rep)
+
+        def launch_job(job: _PagedJob, plan, now: float) -> None:
+            """Book the matched pages' reads on their owning tiers'
+            channels (fencing on in-flight writes per page), then chain
+            into the suffix chunks at load completion."""
+            rep = job.rep
+            if plan is not None and plan.n_pages:
+                t_done, wait = now, 0.0
+                for p in plan.pages:
+                    start = max(now, ready_at.get(p.key, 0.0))
+                    wait = max(wait, start - now)
+                    done = (channels[p.tier].submit(start, p.nbytes)
+                            + p.xlink_delay_s + p.decompress_delay_s)
+                    t_done = max(t_done, done)
+                job.rec["write_wait_s"] = wait
+                note(now, "page_load_issue", req_id=job.req.req_id,
+                     replica=rep.idx, pages=plan.n_pages,
+                     nbytes=plan.nbytes, done=t_done)
+                if job.chunks:
+                    rep.inflight[job.req.context_key] = job
+                loop.push(t_done, EV_LOAD_DONE, job)
+            else:
+                job.t_load_done = now
+                rep.inflight[job.req.context_key] = job
+                issue_chunk(job, now)
+
+        def make_chunks(suffix: int, past: int) -> List[Tuple[int, int]]:
+            if suffix <= 0:
+                return []
+            if self.chunk_tokens <= 0:
+                return [(suffix, past)]
+            out, off = [], 0
+            while off < suffix:
+                n = min(self.chunk_tokens, suffix - off)
+                out.append((n, past + off))
+                off += n
+            return out
+
+        def dispatch_paged(rep: _Replica, lane: int, req: Request,
+                           now: float) -> None:
+            ctx = self.contexts[req.context_key]
+            ent = rep.inflight.get(req.context_key)
+            if ent is not None:          # coalesce onto the in-flight job
+                ent.waiters.append((lane, req, now))
+                note(now, "prefill_coalesce", req_id=req.req_id,
+                     replica=rep.idx)
+                return
+            keys = pkeys(ctx)
+            t_ctx = len(ctx.tokens)
+            plan = self.paged.match_prefix(ctx.tokens, now=now,
+                                           replica=rep.idx, keys=keys)
+            suffix = t_ctx - plan.src_tokens
+            # a full page-run hit never touches the real-compute prefill:
+            # the lane content comes entirely from the fetched pages
+            if plan.n_pages == 0:
+                kv_final = self._prefill_kv(ctx)
+            elif suffix == 0:
+                kv_final = plan.kv
+            else:
+                kv_final = join_kv([plan.kv,
+                                    tail_kv(self._prefill_kv(ctx),
+                                            plan.src_tokens)])
+            if plan.n_pages:
+                pf_hit = False
+                for p in plan.pages:
+                    if (is_dram(p.tier)
+                            and prefetched.pop(p.key, None) is not None):
+                        pf_hit = True
+                if pf_hit:
+                    self.prefetch_stats["hits"] += 1
+                # attribute the hit to the SLOWEST tier in the run (the
+                # page that gates the load) and price page compression
+                # as the kept-token fraction
+                deep = max(plan.pages,
+                           key=lambda p: StorageTopology.level(p.tier))
+                rec = {"hit_tier": deep.tier, "method": "paged",
+                       "rate": plan.n_tokens / max(1, plan.src_tokens),
+                       "remote_hit": any(p.remote for p in plan.pages),
+                       "prefetch_hit": pf_hit,
+                       "pages_hit": plan.n_pages,
+                       "tokens_reused_frac": plan.src_tokens / t_ctx}
+            else:
+                rec = {"hit_tier": None, "method": "none", "rate": 1.0}
+            job = _PagedJob(rep, lane, req, ctx, kv_final, t_ctx, now, rec,
+                            make_chunks(suffix, plan.src_tokens),
+                            insert_task=(ctx.task_type if suffix > 0
+                                         else None))
+            launch_job(job, plan, now)
+
         def dispatch(rep: _Replica, lane: int, req: Request,
                      now: float) -> None:
+            if self.paged is not None:
+                return dispatch_paged(rep, lane, req, now)
             ctx = self.contexts[req.context_key]
             fetched = self.controller.fetch(req.context_key, now=now,
                                             replica=rep.idx)
@@ -407,12 +690,31 @@ class ServingEngine:
                                  "remote_hit": fetched.remote,
                                  "write_wait_s": start - now}))
             elif req.context_key in rep.inflight:
-                kv, done = rep.inflight[req.context_key]
+                ent = rep.inflight[req.context_key]
+                if isinstance(ent, _PagedJob):   # chunked-whole in flight
+                    ent.waiters.append((lane, req, now))
+                    note(now, "prefill_coalesce", req_id=req.req_id,
+                         replica=rep.idx)
+                    return
+                kv, done = ent
                 done = max(done, now)
                 note(now, "prefill_coalesce", req_id=req.req_id,
                      replica=rep.idx, done=done)
                 loop.push(done, EV_PREFILL_DONE,
                           (rep, lane, req, kv, len(ctx.tokens), now, None))
+            elif self.chunk_tokens > 0:
+                # whole-context miss, chunked: the prefill interleaves
+                # with decode on the unified channel and inserts the
+                # whole entry at completion
+                t_ctx = len(ctx.tokens)
+                job = _PagedJob(rep, lane, req, ctx, self._prefill_kv(ctx),
+                                t_ctx, now,
+                                {"hit_tier": None, "method": "none",
+                                 "rate": 1.0},
+                                make_chunks(t_ctx, 0),
+                                insert_task=ctx.task_type,
+                                insert_whole=True)
+                launch_job(job, None, now)
             else:
                 kv = self._prefill_kv(ctx)
                 done = rep.prefill_chan.submit(
@@ -436,11 +738,30 @@ class ServingEngine:
             tick_time(now)
             if kind == EV_ARRIVAL:
                 req = payload
-                rep = min(replicas, key=lambda r: (r.occupancy(), r.idx))
+                rep = route(req)
                 rep.waiting.append(req)
                 note(now, "arrival", req_id=req.req_id, replica=rep.idx)
                 issue(rep, now)
                 maybe_prefetch(now, rep)
+
+            elif kind == EV_CHUNK_DONE:
+                job = payload
+                job.ci += 1
+                note(now, "chunk_done", req_id=job.req.req_id,
+                     replica=job.rep.idx, idx=job.ci - 1,
+                     remaining=len(job.chunks) - job.ci)
+                if job.ci < len(job.chunks):
+                    issue_chunk(job, now)
+                else:
+                    finish_job(job, now)
+
+            elif kind == EV_LOAD_DONE and isinstance(payload, _PagedJob):
+                job = payload
+                job.t_load_done = now
+                if job.chunks:          # suffix prefill starts only once
+                    issue_chunk(job, now)   # the matched pages landed
+                else:
+                    finish_job(job, now)    # pure page hit
 
             elif kind in (EV_LOAD_DONE, EV_PREFILL_DONE):
                 rep, lane, req, kv, orig_len, issue_t, extra = payload
@@ -509,7 +830,10 @@ class ServingEngine:
                         write_wait_s=rec.get("write_wait_s", 0.0),
                         wb_queue_s=rec.get("wb_queue_s", 0.0),
                         wb_transfer_s=rec.get("wb_transfer_s", 0.0),
-                        remote_hit=rec.get("remote_hit", False)))
+                        remote_hit=rec.get("remote_hit", False),
+                        pages_hit=rec.get("pages_hit", 0),
+                        tokens_reused_frac=rec.get("tokens_reused_frac",
+                                                   0.0)))
                 issue(rep, now)
                 maybe_prefetch(now, rep)
 
@@ -579,7 +903,8 @@ class ServingEngine:
 
 
 def summarize(results: Sequence[RequestResult],
-              prefetch_stats: Optional[Dict[str, int]] = None
+              prefetch_stats: Optional[Dict[str, int]] = None,
+              chunk_stats: Optional[Dict[str, float]] = None
               ) -> Dict[str, float]:
     if not results:
         return {"n": 0}
@@ -621,9 +946,21 @@ def summarize(results: Sequence[RequestResult],
         "wb_transfer_mean_s": safe_mean(
             [r.wb_transfer_s for r in results if r.hit_tier is None
              and (r.wb_queue_s > 0 or r.wb_transfer_s > 0)]),
+        # page-granular reuse: matched run length, source-token coverage
+        # and the share of requests that reused SOME pages but still had
+        # to prefill a suffix (the partial-prefix hits paging unlocks)
+        "pages_hit_mean": float(np.mean([r.pages_hit for r in results])),
+        "tokens_reused_frac_mean": float(
+            np.mean([r.tokens_reused_frac for r in results])),
+        "partial_hit_rate": sum(r.pages_hit > 0 and r.prefill_s > 0
+                                for r in results) / n,
     }
     if prefetch_stats is not None:
         # engine-level prefetch counters (issued / hits / wasted /
         # deadline-suppressed) folded into the summary row
         out.update({f"prefetch_{k}": v for k, v in prefetch_stats.items()})
+    if chunk_stats is not None:
+        # chunked-prefill interleave counters: chunks booked, compute
+        # queueing they saw, and decode ticks pushed behind a chunk
+        out.update({f"chunk_{k}": v for k, v in chunk_stats.items()})
     return out

@@ -160,6 +160,16 @@ class ContinuousBatcher:
             req=req, started_s=now, write_slot=n_kept, position=orig_len,
             pending=list(np.asarray(req.question, np.int64)))
 
+    def next_dt(self) -> Optional[float]:
+        """Service time the next ``tick`` will charge (None when all
+        lanes are idle) — lets the unified-compute path book the decode
+        step on a channel BEFORE running it."""
+        active = [i for i, s in enumerate(self.slots) if s.active]
+        if not active:
+            return None
+        max_ctx = max(self.slots[i].position for i in active)
+        return self.tm.decode_step_s(len(active), max_ctx)
+
     # -- one decode tick over all active lanes -------------------------------
     def tick(self, now: float) -> Tuple[List[ScheduledResult], float]:
         active = [i for i, s in enumerate(self.slots) if s.active]
@@ -221,15 +231,20 @@ class ContinuousBatcher:
 # Write completions (insert write-back, demotions, prefetch promotions)
 # order after ticks: in-flight-write fencing is time-based (``ready_at``),
 # so same-timestamp ordering only affects the trace, not results.
+# Chunk completions (paged/chunked prefill) sort last: chunk chains are
+# driven by compute-channel bookings with strictly positive service
+# times, so ties are rare and a lane admitted by a same-time chunk-done
+# simply joins the NEXT tick.
 EV_LOAD_DONE = 0
 EV_PREFILL_DONE = 1
 EV_ARRIVAL = 2
 EV_TICK = 3
 EV_WRITE_DONE = 4
+EV_CHUNK_DONE = 5
 
 EVENT_NAMES = {EV_LOAD_DONE: "load_done", EV_PREFILL_DONE: "prefill_done",
                EV_ARRIVAL: "arrival", EV_TICK: "tick",
-               EV_WRITE_DONE: "write_done"}
+               EV_WRITE_DONE: "write_done", EV_CHUNK_DONE: "chunk_done"}
 
 
 class EventLoop:
@@ -281,6 +296,13 @@ class LaneSet:
         self.waiting: collections.deque = collections.deque()
         self.reserved: set = set()
         self._tick_scheduled = False
+        # unified compute (chunked-prefill mode): when set, decode ticks
+        # book their service time on this channel — the same one prefill
+        # chunks book — so decode and prefill contend for one accelerator
+        # instead of running on independent streams. None = legacy
+        # dedicated-prefill-stream semantics (bit-identical timing).
+        self.compute_chan = None
+        self.compute_stats: Optional[Dict[str, float]] = None
 
     def free_lanes(self) -> List[int]:
         return [i for i in self.batcher.free_lanes()
@@ -319,6 +341,20 @@ class LaneSet:
         if not any(s.active for s in self.batcher.slots):
             self._tick_scheduled = False
             return None
+        if self.compute_chan is not None:
+            # unified compute: reserve the decode step on the shared
+            # channel first — a prefill chunk already holding it pushes
+            # the step (and every result it stamps) past the chunk
+            dt = self.batcher.next_dt()
+            if dt is None or dt <= 0.0:
+                raise RuntimeError("decode tick made no time progress")
+            start, end = self.compute_chan.book(now, dt)
+            if self.compute_stats is not None and start > now:
+                self.compute_stats["ticks_delayed"] += 1
+                self.compute_stats["tick_delay_s"] += start - now
+            done, _ = self.batcher.tick(start)
+            loop.push(end, EV_TICK, self)
+            return done
         done, dt = self.batcher.tick(now)
         if dt <= 0.0:
             raise RuntimeError("decode tick made no time progress")

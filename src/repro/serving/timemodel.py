@@ -57,6 +57,24 @@ class TimeModel:
         t_mem = bytes_rd / self.device.hbm_bw
         return max(t_flops, t_mem)
 
+    def chunk_prefill_s(self, n_new: int, n_past: int,
+                        kv_bytes_per_token: float = None) -> float:
+        """One Sarathi-style prefill chunk: ``n_new`` fresh tokens
+        appended to an ``n_past``-token cached prefix.
+
+        Linear + attention FLOPs for the new tokens run at prefill MFU;
+        on top, every chunk streams the already-cached prefix KV out of
+        HBM once (cross-attention of the chunk against the prefix) —
+        the per-chunk overhead that makes chunked prefill slightly more
+        expensive in total than one monolithic pass, in exchange for
+        interleaving with decode."""
+        kvb = (self.cfg.kv_bytes_per_token()
+               if kv_bytes_per_token is None else kv_bytes_per_token)
+        flops = 2.0 * self.n_active_params * n_new
+        t_flops = flops / (self.device.peak_flops * self.device.mfu_prefill)
+        t_mem = (n_past * kvb) / self.device.hbm_bw
+        return t_flops + t_mem
+
 
 # ---------------------------------------------------------------------------
 # I/O service model (event-driven engine)
@@ -136,16 +154,26 @@ def build_tier_channels(tiers, io_streams, duplex_for):
 
 
 class ComputeChannel:
-    """Single-stream FIFO for a replica's prefill compute: prefills queue
-    behind each other but never behind decode (chunked-prefill style)."""
+    """Single-stream FIFO for a replica's compute.
+
+    Two roles: the legacy dedicated prefill stream (prefills queue behind
+    each other but never behind decode), and — in chunked-prefill mode —
+    the replica's UNIFIED compute channel, where decode ticks and prefill
+    chunks book the same single stream, so prefill chunks interleave with
+    decode steps instead of running on a phantom second accelerator."""
 
     def __init__(self, name: str):
         self.name = name
         self._free_at = 0.0
         self.busy_s = 0.0
 
-    def submit(self, now: float, service_s: float) -> float:
+    def book(self, now: float, service_s: float) -> "Tuple[float, float]":
+        """Book ``service_s`` of compute; returns ``(start, done)`` —
+        queue wait is ``start - now``."""
         start = max(now, self._free_at)
         self._free_at = start + service_s
         self.busy_s += service_s
-        return self._free_at
+        return start, self._free_at
+
+    def submit(self, now: float, service_s: float) -> float:
+        return self.book(now, service_s)[1]

@@ -96,6 +96,45 @@ def make_contexts(rng: np.random.RandomState, vocab: int, n_per_task: int,
     return out
 
 
+def make_prefix_sharing_contexts(rng: np.random.RandomState, vocab: int,
+                                 n_docs: int, n_variants: int,
+                                 prefix_len: int = 256,
+                                 suffix_len: int = 64,
+                                 n_probes: int = 2,
+                                 tasks: Sequence[str] = (
+                                     "qa", "summarization", "coding"),
+                                 ) -> List[Context]:
+    """Prefix-sharing corpus for the page-granular serving path.
+
+    Each *document* is a task-structured context of ``prefix_len +
+    suffix_len`` tokens; its ``n_variants`` variants share the
+    document's first ``prefix_len`` tokens verbatim and diverge in a
+    freshly generated ``suffix_len`` tail (think: many user sessions
+    over one shared document, each with its own follow-up). Tasks cycle
+    across documents so the per-task mix survives. Whole-context caching
+    sees ``n_docs * n_variants`` unrelated keys; page-granular caching
+    sees ``n_docs`` shared page runs plus short divergent suffixes.
+
+    Variants are keyed ``{task}-doc{d}-v{v}``; probes come from the
+    base document (they reference its shared-prefix structure)."""
+    out = []
+    for d in range(n_docs):
+        task = tasks[d % len(tasks)]
+        base, probes = _GEN[task](rng, vocab, prefix_len + suffix_len,
+                                  n_probes)
+        # task generators may truncate to their own granularity (qa emits
+        # 4-token facts), so splice by the ACTUAL tail length and
+        # over-generate the divergent suffix before slicing
+        tail = len(base) - prefix_len
+        for v in range(n_variants):
+            toks = base.copy()
+            if v > 0 and tail > 0:
+                sfx, _ = _GEN[task](rng, vocab, tail + 8, 1)
+                toks[prefix_len:] = sfx[:tail]
+            out.append(Context(f"{task}-doc{d}-v{v}", task, toks, probes))
+    return out
+
+
 def round_robin_requests(contexts: List[Context], n_requests: int,
                          interarrival_s: float, max_new_tokens: int = 24,
                          start_s: float = 0.0) -> List[Request]:

@@ -70,14 +70,19 @@ def test_partial_prefix_reuse_end_to_end(rig, tmp_path):
     vocab = rig.model.cfg.vocab_size
     ctx_a = RNG.randint(0, vocab, 384).astype(np.int32)
     kv_a = rig.prefill_entry(ctx_a)
-    n = paged.insert_context(ctx_a, kv_a, "qa")
-    assert n == 3
+    out = paged.insert_context(ctx_a, kv_a, "qa")
+    assert out.inserted == 3 and out.pages == 3
+    assert out.kept_tokens == 384 and out.remainder_tokens == 0
+    assert not out.dropped_state
 
     ctx_b = ctx_a.copy()
     ctx_b[300:] = RNG.randint(0, vocab, 84)   # diverges inside page 3
     m = paged.match_prefix(ctx_b)
     assert m.n_pages == 2 and m.n_tokens == 256
-    assert m.load_delay_s > 0
+    assert m.src_tokens == 256
+    assert m.total_delay_s > 0
+    assert len(m.pages) == 2 and all(p.nbytes > 0 for p in m.pages)
+    assert ctrl.counters["page_runs_partial"] == 1
 
     # resume from matched pages + prefill suffix == full prefill
     q = np.array([7, 3], np.int32)

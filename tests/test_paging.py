@@ -1,0 +1,316 @@
+"""Page-granular serving path: insert-remainder accounting, split/join
+state preservation, partial-prefix engine hits, the unified chunked
+compute tick, prefix-affinity routing, and the paging-off degenerate
+path pinned against the committed fig5 numbers."""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.compression import default_registry
+from repro.core.controller import AdaptCacheController, SimClock
+from repro.core.estimator import (
+    DEFAULT_DECOMPRESS_BPS, DelayProfile, FrequencyEstimator,
+)
+from repro.core.policy import FixedPolicy, _page_depth
+from repro.models import build_model
+from repro.serving.baselines import build_engine
+from repro.serving.chunking import (
+    PagedPrefixCache, join_kv, page_keys, split_kv, tail_kv,
+)
+from repro.serving.engine import summarize
+from repro.serving.runner import ModelRunner
+from repro.serving.workload import (
+    Context, Request, make_prefix_sharing_contexts, round_robin_requests,
+)
+from repro.storage.tier import DRAMTier, DeviceSpec, SSDTier
+from repro.storage.topology import StorageTopology
+
+FULL = "adaptcache-8b"
+N_ACTIVE = 8_030_000_000
+RNG = np.random.RandomState(13)
+
+
+@pytest.fixture(scope="module")
+def runner():
+    cfg = get_config(FULL, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return ModelRunner(model, params, capacity=256)
+
+
+def _controller(tmp, topology=None):
+    methods = default_registry()
+    topo = topology or StorageTopology()
+    tiers = {name: DRAMTier(DeviceSpec("dram", 64 << 20, 16e9, 16e9),
+                            name=name)
+             for name in topo.dram_names}
+    tiers["ssd"] = SSDTier(DeviceSpec("ssd", 64 << 20, 1e9, 1e9),
+                           root=str(tmp))
+    order = topo.tier_names
+    return AdaptCacheController(
+        methods, tiers, order,
+        FixedPolicy(methods, order, "none", 1.0, topology=topo),
+        DelayProfile(dict(DEFAULT_DECOMPRESS_BPS)),
+        FrequencyEstimator(), clock=SimClock(), topology=topo)
+
+
+# ---------------------------------------------------------------------------
+# split / join / remainder accounting
+# ---------------------------------------------------------------------------
+
+def _synthetic_kv(t, with_state=False):
+    kv = {"k": RNG.randn(2, t, 8).astype(np.float32),
+          "v": RNG.randn(2, t, 8).astype(np.float32),
+          "positions": np.arange(t, dtype=np.int32)}
+    if with_state:
+        kv["ssm"] = RNG.randn(2, 4, 4).astype(np.float32)
+        kv["conv"] = RNG.randn(2, 3, 4).astype(np.float32)
+    return kv
+
+
+def test_split_join_roundtrip_preserves_state():
+    """join(split(kv) pages + remainder) == kv exactly, INCLUDING the
+    SSM state that only lives in the remainder."""
+    kv = _synthetic_kv(100, with_state=True)
+    pages, rem = split_kv(kv, 32)
+    assert len(pages) == 3
+    assert all("ssm" not in p for p in pages)
+    assert "ssm" in rem and rem["k"].shape[1] == 4
+    rebuilt = join_kv(pages + [rem])
+    assert set(rebuilt) == set(kv)
+    for name in kv:
+        np.testing.assert_array_equal(rebuilt[name], kv[name])
+
+
+def test_tail_kv_slices_tokens_keeps_state():
+    kv = _synthetic_kv(50, with_state=True)
+    tail = tail_kv(kv, 30)
+    assert tail["k"].shape[1] == 20
+    np.testing.assert_array_equal(tail["positions"], np.arange(30, 50))
+    np.testing.assert_array_equal(tail["ssm"], kv["ssm"])
+
+
+def test_insert_context_reports_remainder(tmp_path):
+    """The sub-page remainder is NOT stored; the outcome reports kept vs
+    remainder tokens and flags dropped SSM state."""
+    ctrl = _controller(tmp_path)
+    paged = PagedPrefixCache(ctrl, page_tokens=32)
+    tokens = RNG.randint(0, 1000, 100).astype(np.int32)
+
+    out = paged.insert_context(tokens, _synthetic_kv(100), "qa", now=0.0)
+    assert out.inserted == 3 and out.pages == 3
+    assert out.kept_tokens == 96 and out.remainder_tokens == 4
+    assert not out.dropped_state
+    # re-insert: pages already resident, nothing new admitted
+    again = paged.insert_context(tokens, _synthetic_kv(100), "qa", now=1.0)
+    assert again.inserted == 0 and again.pages == 3
+
+    toks2 = RNG.randint(0, 1000, 70).astype(np.int32)
+    out2 = PagedPrefixCache(ctrl, page_tokens=32).insert_context(
+        toks2, _synthetic_kv(70, with_state=True), "qa", now=2.0)
+    assert out2.dropped_state and out2.remainder_tokens == 6
+
+
+def test_match_prefix_plan_and_run_counters(tmp_path):
+    ctrl = _controller(tmp_path)
+    paged = PagedPrefixCache(ctrl, page_tokens=32)
+    tokens = RNG.randint(0, 1000, 96).astype(np.int32)
+    paged.insert_context(tokens, _synthetic_kv(96), "qa", now=0.0)
+
+    divergent = tokens.copy()
+    divergent[70:] = RNG.randint(1000, 2000, 26)
+    plan = paged.match_prefix(divergent, now=1.0)
+    assert plan.n_pages == 2 and plan.src_tokens == 64
+    assert plan.n_tokens == 64
+    assert [p.tier for p in plan.pages] == ["dram", "dram"]
+    assert plan.nbytes == sum(p.nbytes for p in plan.pages)
+    assert plan.total_delay_s > 0
+    assert ctrl.counters["page_runs_partial"] == 1
+    # unrelated tokens: zero-page run counts one request-level miss
+    miss = paged.match_prefix(
+        RNG.randint(2000, 3000, 96).astype(np.int32), now=2.0)
+    assert miss.n_pages == 0 and miss.kv is None
+    assert ctrl.counters["page_runs_miss"] == 1
+    assert ctrl.counters["misses"] == 1
+
+
+def test_page_depth_tiebreak():
+    assert _page_depth("pg-abcd1234-7") == 7
+    assert _page_depth("qa-3") == -1
+    # equal-recency pages evict deepest-first; whole entries keep
+    # insertion order (first minimal wins)
+    from repro.core.entry import EntryMeta
+    metas = [EntryMeta(f"pg-x-{i}", "qa", 1, 1, 0.0, created_at=5.0,
+                       tier="dram", nbytes=1) for i in (0, 2, 1)]
+    methods = default_registry()
+    pol = FixedPolicy(methods, ["dram", "ssd"], "none", 1.0)
+    mv = pol.pick_move("dram", metas, now=9.0)
+    assert mv.key == "pg-x-2"
+
+
+# ---------------------------------------------------------------------------
+# engine: partial-prefix hits, chunked tick, affinity
+# ---------------------------------------------------------------------------
+
+def _prefix_contexts(vocab):
+    rng = np.random.RandomState(21)
+    return make_prefix_sharing_contexts(rng, vocab, n_docs=2, n_variants=3,
+                                        prefix_len=128, suffix_len=64,
+                                        n_probes=2)
+
+
+def _rig(runner, contexts, tmp, *, page=0, chunk=0, replicas=1,
+         split=False, affinity=False):
+    topo = StorageTopology(replicas=replicas, shared_dram=not split)
+    return build_engine(runner, contexts, get_config(FULL), N_ACTIVE,
+                        policy=("none", 1.0), dram_entries=40.0,
+                        ssd_entries=100.0, n_replicas=replicas, n_lanes=2,
+                        ssd_root=str(tmp), topology=topo, page_tokens=page,
+                        chunk_tokens=chunk, affinity=affinity)
+
+
+def test_partial_prefix_hits_end_to_end(runner, tmp_path):
+    """Paged engine: a variant sharing 2 of 3 pages partial-hits, books
+    only the page bytes + suffix prefill, and produces the SAME tokens
+    as the whole-context engine (lossless policy)."""
+    contexts = _prefix_contexts(runner.model.cfg.vocab_size)
+    reqs = round_robin_requests(contexts, 12, 0.05, max_new_tokens=6)
+
+    rig_w = _rig(runner, contexts, tmp_path / "w")
+    res_w = rig_w.engine.process(reqs, skip_quality=True)
+    rig_p = _rig(runner, contexts, tmp_path / "p", page=64)
+    res_p = rig_p.engine.process(reqs, skip_quality=True)
+
+    assert [r.answer for r in res_p] == [r.answer for r in res_w]
+    partial = [r for r in res_p if 0 < r.tokens_reused_frac < 1.0]
+    assert partial, "no partial-prefix hits on a prefix-sharing workload"
+    for r in partial:
+        assert r.pages_hit >= 1 and r.hit_tier is not None
+        assert r.prefill_s > 0          # suffix still recomputed
+        assert r.method == "paged"
+    s = summarize(res_p)
+    assert s["tokens_reused_frac_mean"] > 0.3
+    assert s["partial_hit_rate"] > 0
+    assert s["pages_hit_mean"] > 0
+    # fewer compute-seconds of prefill than all-or-nothing
+    assert (sum(r.prefill_s for r in res_p)
+            < sum(r.prefill_s for r in res_w))
+    # page loads were booked on channels (trace carries page events)
+    kinds = {k for _, k, _ in rig_p.engine.last_trace}
+    assert "page_load_issue" in kinds and "page_insert" in kinds
+
+
+def test_chunked_prefill_unified_tick(runner, tmp_path):
+    """Chunked mode splits prefill into chunk-done events on the SAME
+    channel decode books: chunks queue (chunk_queue_s) and decode ticks
+    get delayed behind chunks; token content is unchanged."""
+    contexts = _prefix_contexts(runner.model.cfg.vocab_size)
+    reqs = round_robin_requests(contexts, 8, 0.01, max_new_tokens=6)
+
+    rig_m = _rig(runner, contexts, tmp_path / "m", page=64)
+    res_m = rig_m.engine.process(reqs, skip_quality=True)
+    rig_c = _rig(runner, contexts, tmp_path / "c", page=64, chunk=32)
+    res_c = rig_c.engine.process(reqs, skip_quality=True)
+
+    assert [r.answer for r in res_c] == [r.answer for r in res_m]
+    cs = rig_c.engine.chunk_stats
+    assert cs["chunks_issued"] > len(
+        [r for r in res_c if r.prefill_s > 0])   # >1 chunk per prefill
+    assert cs["ticks_delayed"] > 0 and cs["tick_delay_s"] > 0
+    kinds = [k for _, k, _ in rig_c.engine.last_trace]
+    assert "chunk_issue" in kinds and "chunk_done" in kinds
+    # monolithic mode books no chunk events beyond one per prefill job
+    s = summarize(res_c, chunk_stats=cs)
+    assert s["chunk_chunks_issued"] == cs["chunks_issued"]
+
+
+def test_chunked_whole_context_coalesces(runner, tmp_path):
+    """Chunking without paging: whole-context misses prefill in chunks,
+    concurrent same-context misses coalesce onto the in-flight job."""
+    contexts = _prefix_contexts(runner.model.cfg.vocab_size)[:1]
+    c = contexts[0]
+    reqs = [Request(i, c.key, c.probes[0], 0.001 * (i + 1), c.task_type, 4)
+            for i in range(2)]
+    rig = _rig(runner, contexts, tmp_path, chunk=32)
+    res = rig.engine.process(reqs, skip_quality=True)
+    assert len(res) == 2
+    kinds = [k for _, k, _ in rig.engine.last_trace]
+    assert "prefill_coalesce" in kinds
+    assert kinds.count("page_insert") == 0      # whole-entry insert
+    assert rig.controller.lookup(c.key) is not None
+    seq = runner.generate_from_kvdata(
+        runner.prefill_entry(c.tokens), len(c.tokens), c.probes[0], 4)
+    assert res[0].answer == seq and res[1].answer == seq
+
+
+def test_affinity_routes_to_page_owner(runner, tmp_path):
+    """Split-DRAM 2-replica box: least-loaded routing alternates
+    replicas and pays the link on the sibling's page run; prefix
+    affinity keeps a document's traffic on the replica homing its
+    pages, cutting the remote-hit share."""
+    contexts = _prefix_contexts(runner.model.cfg.vocab_size)
+    reqs = round_robin_requests(contexts, 12, 0.05, max_new_tokens=4)
+
+    rig_ll = _rig(runner, contexts, tmp_path / "ll", page=64,
+                  replicas=2, split=True, affinity=False)
+    res_ll = rig_ll.engine.process(reqs, skip_quality=True)
+    rig_af = _rig(runner, contexts, tmp_path / "af", page=64,
+                  replicas=2, split=True, affinity=True)
+    res_af = rig_af.engine.process(reqs, skip_quality=True)
+
+    s_ll, s_af = summarize(res_ll), summarize(res_af)
+    assert s_ll["remote_hit_rate"] > 0
+    assert s_af["remote_hit_rate"] < s_ll["remote_hit_rate"]
+    assert [r.answer for r in res_af] == [r.answer for r in res_ll]
+
+
+# ---------------------------------------------------------------------------
+# degenerate path: paging/chunking/affinity off == committed fig5
+# ---------------------------------------------------------------------------
+
+def test_degenerate_reproduces_committed_fig5():
+    """With paging, chunking, and affinity all off, the engine must be
+    bit-for-bit the PR-3 path: rebuild the fig5 'duplex' configuration
+    and match the committed experiments/fig5_topology.csv row exactly
+    (to the CSV's 1e-6 precision)."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    csv = os.path.join(root, "experiments", "fig5_topology.csv")
+    if not os.path.exists(csv):
+        pytest.skip("no committed fig5 artifact")
+    sys.path.insert(0, os.path.join(root, "benchmarks"))
+    try:
+        import fig5_topology as f5
+        from fig4_prefetch import skewed_requests
+    finally:
+        sys.path.pop(0)
+    from repro.serving.workload import make_contexts
+
+    cfg = get_config(f5.ARCH, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rnr = ModelRunner(model, params, capacity=256)
+    rng = np.random.RandomState(7)
+    contexts = make_contexts(rng, cfg.vocab_size, 2, min_len=96,
+                             max_len=160, n_probes=2)
+    requests = skewed_requests(contexts, 48, f5.SWEEP_GAP_S, max_new=8)
+    prefills = {c.key: rnr.prefill_entry(c.tokens) for c in contexts}
+    s, _ = f5.run_mode(rnr, contexts, get_config(f5.ARCH), prefills,
+                       requests, replicas=1, split=False, duplex=True,
+                       lanes=f5.LANES, label="degen", skip_quality=True)
+
+    with open(csv) as f:
+        header = f.readline().strip().split(",")
+        ref = None
+        for line in f:
+            vals = line.strip().split(",")
+            if vals[0] == "duplex":
+                ref = dict(zip(header[1:], map(float, vals[1:])))
+    assert ref is not None
+    for key in ("ttft_mean_s", "ttft_p90_s", "ttft_p99_s", "load_mean_s",
+                "hit_rate_dram", "hit_rate_ssd", "queue_mean_s",
+                "write_wait_mean_s"):
+        assert abs(s[key] - ref[key]) <= 1.5e-6, (key, s[key], ref[key])

@@ -80,6 +80,33 @@ def test_wsd_schedule_bounds(step):
     assert 0.0 <= v <= 1.0 + 1e-6
 
 
+@given(t=st.integers(1, 220), page=st.sampled_from([16, 32, 64, 128]),
+       layers=st.integers(1, 3), feat=st.sampled_from([4, 8]),
+       with_state=st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_split_join_roundtrip_property(t, page, layers, feat, with_state):
+    """For any length/page size, join(split(kv) pages + remainder)
+    reconstructs the entry EXACTLY: token arrays and positions in
+    order, and SSM state (which only lives in the remainder) intact."""
+    from repro.serving.chunking import join_kv, split_kv
+    kv = {"k": RNG.randn(layers, t, feat).astype(np.float32),
+          "v": RNG.randn(layers, t, feat).astype(np.float32),
+          "positions": np.arange(t, dtype=np.int32)}
+    if with_state:
+        kv["ssm"] = RNG.randn(layers, 4, 4).astype(np.float32)
+        kv["conv"] = RNG.randn(layers, 3, 4).astype(np.float32)
+    pages, rem = split_kv(kv, page)
+    assert len(pages) == t // page
+    assert all(p["k"].shape[1] == page for p in pages)
+    assert rem["k"].shape[1] == t - page * (t // page)
+    # state is never paged: it rides the remainder only
+    assert all("ssm" not in p and "conv" not in p for p in pages)
+    rebuilt = join_kv(pages + [rem])
+    assert set(rebuilt) == set(kv)
+    for name, a in kv.items():
+        np.testing.assert_array_equal(rebuilt[name], a)
+
+
 @given(n=st.integers(16, 2048))
 @settings(max_examples=20, deadline=None)
 def test_q8_codec_roundtrip_bound(n):
