@@ -1,0 +1,31 @@
+"""Committed-artifact helpers shared by the self-checking benchmarks.
+
+Several figure benchmarks pin a knobs-off degenerate run against a
+PREVIOUSLY COMMITTED CSV row (fig5 vs fig4's, fig7 vs fig6's). The
+loader lives here so the fail-on-missing behavior is defined once: a
+benchmark whose reference artifact is absent must FAIL its self-check
+loudly, never silently skip it.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict
+
+
+def load_committed_row(csv_path: str, label: str,
+                       regenerate_with: str) -> Dict[str, float]:
+    """Return the ``label`` row of a committed benchmark CSV as a
+    {column: float} dict. Raises SystemExit when the artifact is
+    missing (``regenerate_with`` names the command that recreates it)
+    and AssertionError when the row is absent."""
+    if not os.path.exists(csv_path):
+        raise SystemExit(
+            f"{csv_path} missing — the degenerate self-check needs the "
+            f"committed artifact (re-run {regenerate_with})")
+    with open(csv_path) as f:
+        header = f.readline().strip().split(",")
+        for line in f:
+            vals = line.strip().split(",")
+            if vals[0] == label:
+                return dict(zip(header[1:], map(float, vals[1:])))
+    raise AssertionError(f"committed {csv_path} has no {label!r} row")

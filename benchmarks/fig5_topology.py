@@ -159,24 +159,21 @@ def main(out_csv: str = "experiments/fig5_topology.csv",
         degen, _ = run_mode(runner, contexts, full, prefills, fig4_reqs,
                             replicas=1, split=False, duplex=True,
                             lanes=4, label="degen", skip_quality=True)
-        fig4_csv = "experiments/fig4_prefetch.csv"
-        if os.path.exists(fig4_csv):
-            with open(fig4_csv) as f:
-                header = f.readline().strip().split(",")
-                for line in f:
-                    vals = line.strip().split(",")
-                    if vals[0] == "aggressive":
-                        ref = dict(zip(header[1:], map(float, vals[1:])))
-                        rel = abs(degen["ttft_mean_s"] - ref["ttft_mean_s"]) \
-                            / ref["ttft_mean_s"]
-                        assert rel < 0.02, (
-                            f"degenerate topology drifted from PR-2 fig4: "
-                            f"{degen['ttft_mean_s']:.6f} vs "
-                            f"{ref['ttft_mean_s']:.6f}")
-                        print(f"degenerate check: ttft_mean "
-                              f"{degen['ttft_mean_s']*1e3:.2f}ms vs fig4 "
-                              f"aggressive {ref['ttft_mean_s']*1e3:.2f}ms "
-                              f"(rel {rel:.1%})")
+        # a missing artifact FAILS the self-check instead of silently
+        # skipping — the degenerate guarantee is the point of the run
+        from artifacts import load_committed_row
+        ref = load_committed_row("experiments/fig4_prefetch.csv",
+                                 "aggressive",
+                                 "benchmarks/fig4_prefetch.py")
+        rel = abs(degen["ttft_mean_s"] - ref["ttft_mean_s"]) \
+            / ref["ttft_mean_s"]
+        assert rel < 0.02, (
+            f"degenerate topology drifted from PR-2 fig4: "
+            f"{degen['ttft_mean_s']:.6f} vs {ref['ttft_mean_s']:.6f}")
+        print(f"degenerate check: ttft_mean "
+              f"{degen['ttft_mean_s']*1e3:.2f}ms vs fig4 "
+              f"aggressive {ref['ttft_mean_s']*1e3:.2f}ms "
+              f"(rel {rel:.1%})")
 
     print(f"\nhalf-duplex SSD costs +{penalty*1e3:.2f}ms mean TTFT "
           f"({half['ttft_mean_s']/dup['ttft_mean_s']:.2f}x); 2 replica-local "

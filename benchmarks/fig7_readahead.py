@@ -1,0 +1,246 @@
+"""Readahead benchmark: page-level sequential prefetch + remainder cache.
+
+Runs a prefix-sharing workload whose contexts do NOT page-align (3 pages
+of 64 + a 48-token sub-page tail) with skewed traffic (doc 0's variants
+take 3/4 of requests) on a DRAM tier sized for ~40% of the page set, so
+partial-prefix hits are gated by the serialized SSD channel — the regime
+the two page-native knobs attack:
+
+  paged          PR-4 page-granular serving + chunked prefill, knobs
+                 off: every partial hit re-reads its cold pages from SSD
+                 (fetch-then-compute) and re-prefills the sub-page tail
+                 on every exact repeat
+  readahead      --readahead-pages 4: a matched run immediately stages
+                 its slow-resident pages SSD->DRAM behind the serving
+                 reads, hot runs (run-level FrequencyEstimator) are
+                 staged from idle channel time before they are requested,
+                 and the suffix chunks overlap the page loads
+                 (fetch-compute pipeline) -> SSD page hits convert to
+                 DRAM and the I/O leaves the critical path
+  readahead_rem  + --remainder-cache: the 48-token tail is stored as a
+                 full-context-keyed remainder entry, so exact repeats
+                 match pages + remainder and recompute NOTHING
+
+The fixed lossless policy keeps token content identical in every mode
+(asserted), so the TTFT deltas are pure storage/compute scheduling.
+A degenerate (both knobs off) rerun of fig6's "paged" mode must match
+the committed experiments/fig6_paging.csv row bit-for-bit — and FAILS
+(rather than silently skipping) when the artifact is missing.
+
+    PYTHONPATH=src python benchmarks/fig7_readahead.py [--smoke]
+
+Emits experiments/fig7_readahead.csv and BENCH_fig7.json; ``--smoke``
+runs a shortened request stream for the CI benchmark-smoke job (the
+degenerate fig6 replay is skipped there — tier-1 tests pin it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import fig6_paging as f6  # noqa: E402
+from artifacts import load_committed_row  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.serving.baselines import build_engine  # noqa: E402
+from repro.serving.engine import summarize  # noqa: E402
+from repro.serving.runner import ModelRunner  # noqa: E402
+from repro.serving.workload import (  # noqa: E402
+    Request, make_prefix_sharing_contexts, round_robin_requests,
+)
+
+ARCH = "adaptcache-8b"
+N_ACTIVE = 8_030_000_000
+
+PAGE = 64                   # tokens per page
+CHUNK = 32                  # tokens per prefill chunk
+GAP_S = 0.02                # SSD-busy pacing (cold page loads gate TTFT)
+PREFIX = 2 * PAGE           # shared pages 0-1; page 2 + tail diverge
+SUFFIX = PAGE + 48          # -> 240 tokens: 3 pages + 48-token remainder
+LANES = 4
+
+# label, readahead_pages, remainder_cache
+MODES = [
+    ("paged", 0, False),
+    ("readahead", 4, False),
+    ("readahead_rem", 4, True),
+]
+
+CSV_KEYS = ["ttft_mean_s", "ttft_p50_s", "ttft_p90_s", "ttft_p99_s",
+            "quality_mean", "hit_rate", "hit_rate_dram", "hit_rate_ssd",
+            "pages_hit_mean", "tokens_reused_frac_mean",
+            "partial_hit_rate", "remainder_hit_rate", "queue_mean_s",
+            "load_mean_s", "prefill_mean_s", "readahead_issued",
+            "readahead_hits", "readahead_wasted", "readahead_cancelled"]
+
+
+def skewed_requests(contexts, n: int, gap_s: float, max_new: int):
+    """Deterministic skew: doc 0's three variants take 3/4 of the
+    traffic (their run is HOT for the run-level estimator), the other
+    docs' base variants fill the rest."""
+    cycle = [0, 1, 2, 3, 0, 1, 2, 6, 0, 1, 2, 4]
+    reqs = []
+    for i in range(n):
+        c = contexts[cycle[i % len(cycle)]]
+        reqs.append(Request(i, c.key, c.probes[i % len(c.probes)],
+                            (i + 1) * gap_s, c.task_type, max_new))
+    return reqs
+
+
+def run_mode(runner, contexts, full, prefills, requests, *, readahead,
+             remainder, label, skip_quality=False):
+    rig = build_engine(runner, contexts, full, N_ACTIVE,
+                       policy=("none", 1.0), dram_entries=2.5,
+                       ssd_entries=50.0, n_lanes=LANES,
+                       ssd_root=tempfile.mkdtemp(prefix=f"f7_{label}_"),
+                       page_tokens=PAGE, chunk_tokens=CHUNK,
+                       readahead_pages=readahead,
+                       remainder_cache=remainder)
+    # identical warm page set in every mode: insert every context once;
+    # the LRU enforce pass demotes the cold docs' pages to the SSD
+    for c in contexts:
+        rig.engine.paged.insert_context(c.tokens, prefills[c.key],
+                                        c.task_type, now=0.0)
+    res = rig.engine.process(requests, skip_quality=skip_quality)
+    s = summarize(res, readahead_stats=rig.engine.readahead_stats)
+    answers = tuple(tuple(r.answer) for r in
+                    sorted(res, key=lambda r: r.req_id))
+    return s, answers, res
+
+
+def check_degenerate_fig6(runner) -> float:
+    """Replay fig6's committed 'paged' mode with both knobs off (they
+    ARE off in run_mode's engine only when readahead=0/remainder=False —
+    fig6.run_mode never sets them) and compare against the committed
+    artifact row. A missing artifact is a FAILURE: the degenerate
+    bit-for-bit guarantee is this benchmark's core self-check."""
+    ref = load_committed_row("experiments/fig6_paging.csv", "paged",
+                             "benchmarks/fig6_paging.py")
+    cfg = get_config(ARCH, smoke=True)
+    rng = np.random.RandomState(11)
+    contexts = make_prefix_sharing_contexts(
+        rng, cfg.vocab_size, n_docs=3, n_variants=4,
+        prefix_len=2 * f6.PAGE, suffix_len=f6.PAGE, n_probes=2)
+    requests = round_robin_requests(contexts, 30, f6.GAP_S,
+                                    max_new_tokens=8)
+    s, _, _ = f6.run_mode(runner, contexts, get_config(ARCH), requests,
+                          page=f6.PAGE, chunk=0, replicas=1, split=False,
+                          affinity=False, label="degen",
+                          skip_quality=True)
+    drift = max(abs(s[k] - ref[k]) for k in f6.CSV_KEYS)
+    assert drift <= 1.5e-6, \
+        f"knobs-off engine drifted from committed fig6 paged row: {drift}"
+    return drift
+
+
+def main(out_csv: str = "experiments/fig7_readahead.csv",
+         out_json: str = "BENCH_fig7.json", smoke: bool = False):
+    cfg = get_config(ARCH, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    runner = ModelRunner(model, params, capacity=256)
+
+    rng = np.random.RandomState(23)
+    contexts = make_prefix_sharing_contexts(
+        rng, cfg.vocab_size, n_docs=3, n_variants=3,
+        prefix_len=PREFIX, suffix_len=SUFFIX, n_probes=2)
+    n_req = 24 if smoke else 36
+    requests = skewed_requests(contexts, n_req, GAP_S, max_new=6)
+    full = get_config(ARCH)
+    prefills = {c.key: runner.prefill_entry(c.tokens) for c in contexts}
+
+    rows, stats, answers = [], {}, {}
+    for label, readahead, remainder in MODES:
+        s, ans, _ = run_mode(runner, contexts, full, prefills, requests,
+                             readahead=readahead, remainder=remainder,
+                             label=label, skip_quality=smoke)
+        stats[label], answers[label] = s, ans
+        rows.append((label, s))
+        print(f"{label:14s} ttft_mean={s['ttft_mean_s']*1e3:7.1f}ms "
+              f"p90={s['ttft_p90_s']*1e3:7.1f}ms "
+              f"dram={s['hit_rate_dram']:.2f} ssd={s['hit_rate_ssd']:.2f} "
+              f"reuse={s['tokens_reused_frac_mean']:.2f} "
+              f"rem={s['remainder_hit_rate']:.2f} "
+              f"ra={int(s['readahead_issued'])}/{int(s['readahead_hits'])}"
+              f" (wasted={int(s['readahead_wasted'])} "
+              f"cancelled={int(s['readahead_cancelled'])})")
+
+    # lossless fixed policy: token content must not depend on readahead,
+    # pipelining, or remainder caching
+    base = answers["paged"]
+    for label in stats:
+        assert answers[label] == base, \
+            f"answers diverged between paged and {label}"
+
+    paged, ra, rem = (stats["paged"], stats["readahead"],
+                      stats["readahead_rem"])
+    # readahead actually ran: promotions issued, some rewarded by hits,
+    # and diverging variant runs exercised the cancel path
+    assert ra["readahead_issued"] > 0 and ra["readahead_hits"] > 0
+    assert ra["readahead_cancelled"] > 0, \
+        "diverging variants should cancel stale readahead"
+    # staging hot runs converts SSD page hits into DRAM page hits
+    assert ra["hit_rate_dram"] > paged["hit_rate_dram"], \
+        "readahead did not convert SSD page hits to DRAM"
+    assert ra["ttft_mean_s"] < paged["ttft_mean_s"], \
+        "readahead did not lower mean TTFT"
+    # remainder cache: exact repeats become full hits — no tail prefill
+    assert rem["remainder_hit_rate"] > 0.5, \
+        "exact repeats did not match their remainder entries"
+    assert rem["tokens_reused_frac_mean"] > ra["tokens_reused_frac_mean"]
+    assert rem["prefill_mean_s"] < paged["prefill_mean_s"]
+    # the acceptance headline: both knobs beat PR-4 paged serving
+    assert rem["ttft_mean_s"] < paged["ttft_mean_s"], \
+        "readahead+remainder did not lower mean TTFT vs PR-4 paged mode"
+
+    speedup = paged["ttft_mean_s"] / rem["ttft_mean_s"]
+    print(f"\nreadahead+remainder: mean TTFT "
+          f"{paged['ttft_mean_s']*1e3:.1f}ms -> "
+          f"{rem['ttft_mean_s']*1e3:.1f}ms ({speedup:.2f}x); readahead "
+          f"alone {ra['ttft_mean_s']*1e3:.1f}ms at "
+          f"{ra['hit_rate_dram']:.0%} DRAM hits (vs "
+          f"{paged['hit_rate_dram']:.0%}); remainder hits "
+          f"{rem['remainder_hit_rate']:.0%} of requests")
+
+    drift = None
+    if not smoke:
+        drift = check_degenerate_fig6(runner)
+        print(f"degenerate check: knobs-off fig6 'paged' replay matches "
+              f"the committed artifact (max drift {drift:.2e})")
+
+    if os.path.dirname(out_csv):
+        os.makedirs(os.path.dirname(out_csv), exist_ok=True)
+    with open(out_csv, "w") as f:
+        f.write("mode," + ",".join(CSV_KEYS) + "\n")
+        for label, s in rows:
+            f.write(label + "," + ",".join(f"{s[k]:.6f}" for k in CSV_KEYS)
+                    + "\n")
+    with open(out_json, "w") as f:
+        json.dump({"benchmark": "fig7_readahead", "smoke": smoke,
+                   "n_requests": n_req, "page_tokens": PAGE,
+                   "chunk_tokens": CHUNK, "readahead_pages": 4,
+                   "modes": {label: {k: s[k] for k in CSV_KEYS}
+                             for label, s in rows},
+                   "readahead_remainder_speedup": speedup,
+                   "degenerate_fig6_drift": drift},
+                  f, indent=2)
+    print(f"wrote {out_csv} and {out_json}")
+    return stats
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shortened stream for the CI benchmark-smoke job")
+    ap.add_argument("--out-csv", default="experiments/fig7_readahead.csv")
+    ap.add_argument("--out-json", default="BENCH_fig7.json")
+    args = ap.parse_args()
+    main(out_csv=args.out_csv, out_json=args.out_json, smoke=args.smoke)

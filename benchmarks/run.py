@@ -5,8 +5,12 @@
   fig1_hitrate        Fig. 1 — hit-rate / load-delay / quality triangle
   fig2_ttft_quality   Fig. 2 — TTFT vs quality Pareto, 3 tasks x 9 policies
   fig3_overlap        —      — event-driven vs serialized loop, SSD-heavy
+  fig4_prefetch       —      — speculative SSD->DRAM promotion sweep
+  fig5_topology       —      — per-replica DRAM x half-duplex SSD sweep
   fig6_paging         —      — partial-prefix hits / chunked prefill /
                                prefix-affinity on a prefix-sharing workload
+  fig7_readahead      —      — page-level sequential readahead + remainder
+                               caching vs the PR-4 paged path
   tab_alpha_hitrate   §3     — DRAM hit rate vs alpha sweep
   estimator_curves    §2     — offline quality-rate profiling
   kernel_bench        —      — Pallas-op microbenches (CSV contract)
@@ -29,7 +33,8 @@ def main() -> None:
 
     os.makedirs("experiments", exist_ok=True)
     from benchmarks import (estimator_curves, fig1_hitrate,
-                            fig2_ttft_quality, fig3_overlap, fig6_paging,
+                            fig2_ttft_quality, fig3_overlap, fig4_prefetch,
+                            fig5_topology, fig6_paging, fig7_readahead,
                             kernel_bench, roofline_bench,
                             tab_alpha_hitrate)
     suites = [
@@ -42,7 +47,10 @@ def main() -> None:
             ("fig1_hitrate", fig1_hitrate.main),
             ("fig2_ttft_quality", fig2_ttft_quality.main),
             ("fig3_overlap", fig3_overlap.main),
+            ("fig4_prefetch", fig4_prefetch.main),
+            ("fig5_topology", fig5_topology.main),
             ("fig6_paging", fig6_paging.main),
+            ("fig7_readahead", fig7_readahead.main),
             ("tab_alpha_hitrate", tab_alpha_hitrate.main),
         ]
     for name, fn in suites:

@@ -5,6 +5,8 @@ Serving-engine contract:
     fetch(key, now=t)                  — load on hit; (kv, delay breakdown)
     promote(key, now=t [, transfers])  — speculative prefetch into DRAM
     prefetch_candidates(now=t)         — hot slow-tier keys, hottest first
+    run_candidates(now=t)              — hot PAGE RUNS (key chain) for
+                                         sequential readahead
     lookup(key)                        — tier name or None
     stats()                            — hit rates per tier, byte counters
 
@@ -51,7 +53,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.compression.base import KVData, kv_nbytes, kv_num_tokens
 from repro.core.entry import EntryMeta
 from repro.core.estimator import (
-    DelayProfile, FrequencyEstimator, QualityEstimator, redundancy_feature,
+    DelayProfile, FrequencyEstimator, QualityEstimator,
+    RunFrequencyEstimator, redundancy_feature,
 )
 from repro.core.executor import Executor
 from repro.core.policy import AdaptivePolicy, BasePolicy, Placement
@@ -110,6 +113,21 @@ class FetchResult:
 
 
 class AdaptCacheController:
+    """Facade tying estimator + policy + executor into one cache API.
+
+    Contract: every public call is instantaneous on the data plane —
+    bytes land (or leave) the moment the call returns, so per-tier byte
+    conservation holds at every event; the TIME cost of each movement is
+    returned as queued ``Transfer``s / delay fields for the caller to
+    book. All delays are SECONDS of simulated time, all sizes are stored
+    BYTES (post-compression). ``now`` arguments are simulated timestamps
+    and must be monotone per caller: the engine passes fetch *issue*
+    times and insert *completion* times, so EWMA frequency estimates see
+    the clock the requests experience. The controller is shared state
+    across engine replicas; it performs no locking and assumes the
+    single-threaded event-loop discipline of the serving engine.
+    """
+
     def __init__(self, methods, tiers: Dict[str, Tier],
                  tier_order: Sequence[str], policy: BasePolicy,
                  delay_profile: DelayProfile,
@@ -126,6 +144,15 @@ class AdaptCacheController:
         self.topology = topology
         self.executor = Executor(methods, tiers, tier_order)
         self.meta: Dict[str, EntryMeta] = {}
+        # page-run signals (paged serving): run-level hit-rate EWMA plus
+        # the latest observed page-key chain per run, consumed by the
+        # engine's sequential readahead (run_candidates). The registry
+        # is capped: when it overflows, the coldest run (and its EWMA
+        # state) is dropped, so a long unique-context stream cannot grow
+        # it or the per-event candidate scan without bound.
+        self.run_freq = RunFrequencyEstimator()
+        self.page_runs: Dict[str, List[str]] = {}
+        self.max_page_runs = 512
         self.counters = {"hits": 0, "misses": 0, "inserts": 0,
                          "prefetches": 0, "hit_remote": 0,
                          "page_runs": 0, "page_run_hits": 0,
@@ -202,22 +229,44 @@ class AdaptCacheController:
                            load, dec, meta.nbytes, remote=remote,
                            xlink_delay_s=xlink)
 
-    def note_page_run(self, n_hit: int, n_pages: int) -> None:
+    def note_page_run(self, n_hit: int, n_pages: int,
+                      run_key: Optional[str] = None,
+                      keys: Optional[List[str]] = None,
+                      now: Optional[float] = None,
+                      rem_hit: bool = False) -> None:
         """Record one page-granular prefix match (``PagedPrefixCache``):
         under paging, ``hits``/``misses`` count individual page fetches,
         so run-level counters keep request-granular stats visible —
         full/partial/miss runs plus the total pages reused. A run that
         matched nothing is the paged analogue of a whole-entry miss and
-        counts one ``miss``."""
+        counts one ``miss`` — unless a remainder entry served the
+        request (``rem_hit``), which counts as a FULL run even when the
+        chain is empty (a sub-page context served entirely from its
+        remainder). When ``run_key`` is given the run-level frequency
+        EWMA is updated and ``keys`` (the requesting context's full page
+        chain) is remembered as the run's latest trajectory — the chain
+        sequential readahead will walk (``run_candidates``); a diverging
+        variant simply overwrites it."""
         self.counters["page_runs"] += 1
         self.counters["page_run_hits"] += n_hit
-        if n_hit == 0:
+        if n_hit == 0 and not rem_hit:
             self.counters["misses"] += 1
             self.counters["page_runs_miss"] += 1
         elif n_hit < n_pages:
             self.counters["page_runs_partial"] += 1
         else:
             self.counters["page_runs_full"] += 1
+        if run_key is not None:
+            now = self.clock() if now is None else now
+            self.run_freq.note_run(run_key, now)
+            if keys is not None:
+                self.page_runs[run_key] = list(keys)
+                if len(self.page_runs) > self.max_page_runs:
+                    coldest = min(
+                        self.page_runs,
+                        key=lambda rk: (self.run_freq.predict(rk, now), rk))
+                    self.page_runs.pop(coldest)
+                    self.run_freq.forget(coldest)
 
     # -- speculative prefetch ---------------------------------------------------
     def prefetch_candidates(self, now: Optional[float] = None,
@@ -240,6 +289,22 @@ class AdaptCacheController:
                     if m.tier is not None and m.tier != fast]
         cands = [(self.freq.predict(m.key, now), m.key) for m in slow]
         return [k for f, k in sorted(cands, key=lambda t: (-t[0], t[1]))
+                if f >= min_hz][:limit]
+
+    def run_candidates(self, now: Optional[float] = None, limit: int = 8,
+                       min_hz: float = 0.0
+                       ) -> List[Tuple[str, List[str]]]:
+        """Page runs ranked by run-level predicted hit rate (hottest
+        first): ``(run_key, latest page-key chain)`` pairs, filtered to
+        rates >= ``min_hz``. The engine's sequential readahead walks
+        each chain in order and promotes slow-tier-resident pages before
+        they are requested again; ``promote``'s displacement guard still
+        arbitrates every individual move."""
+        now = self.clock() if now is None else now
+        cands = [(self.run_freq.predict(rk, now), rk)
+                 for rk in self.page_runs]
+        return [(rk, self.page_runs[rk])
+                for f, rk in sorted(cands, key=lambda t: (-t[0], t[1]))
                 if f >= min_hz][:limit]
 
     def promote(self, key: str, now: Optional[float] = None,

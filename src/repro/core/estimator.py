@@ -190,3 +190,26 @@ class FrequencyEstimator:
     def forget(self, key: str) -> None:
         self._rate.pop(key, None)
         self._last.pop(key, None)
+
+
+class RunFrequencyEstimator(FrequencyEstimator):
+    """Run-level frequency: one EWMA per page RUN instead of per entry.
+
+    A *run* is the ordered page chain of one context
+    (``serving.chunking.page_keys``), identified by its FIRST page key —
+    contexts sharing a prefix share the run identity, so the estimate
+    aggregates all variants of a document. ``note_run`` folds one
+    prefix-match observation (a ``match_prefix`` call) into the run's
+    hit-rate EWMA (Hz, sim-time seconds); how far a hot run extends is
+    the controller's business (it registers each run's latest page-key
+    chain alongside this estimator). Inherits the per-key decay and
+    optimistic-prior semantics of ``FrequencyEstimator``.
+    """
+
+    def note_run(self, run_key: str, now: float) -> None:
+        """Record one prefix match against the run (a hit-rate sample
+        at sim time ``now``; the first observation seeds the prior)."""
+        if self.seen(run_key):
+            self.on_hit(run_key, now)
+        else:
+            self.on_insert(run_key, now)

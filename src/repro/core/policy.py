@@ -70,6 +70,17 @@ class Placement:
 class BasePolicy:
     """Interface used by the controller.
 
+    Contract: ``admit`` maps a fresh entry to a ``Placement`` (tier,
+    codec, rate) and ``pick_move`` proposes ONE capacity-restoring move
+    for an over-full tier; neither mutates any state — the controller's
+    executor applies decisions, so a policy can be re-queried freely.
+    Utilities are in (quality x Hz) minus SECONDS-of-delay units; all
+    sizes are stored BYTES. Page (``pg-*``) and remainder (``rem-*``)
+    entries flow through the same machinery as whole contexts — each is
+    one independent knapsack item whose bytes/frequency/quality carry
+    its own accounting (a remainder is just the smallest, deepest item
+    of its run).
+
     Policies constructed with a ``StorageTopology`` see the expanded
     placement space: the knapsack choices per entry are
     {each replica's DRAM, shared SSD, evict} x codec, and a placement in
@@ -106,7 +117,15 @@ class BasePolicy:
 
 
 class AdaptivePolicy(BasePolicy):
-    """The paper's policy."""
+    """The paper's utility-driven policy (module doc): admission picks
+    the max-utility (tier, method, rate) state for an entry, and
+    enforcement applies the greedy MCKP move with minimal marginal
+    utility drop per byte freed. ``utility`` is
+    ``Freq(Hz) * (alpha * Quality[0..1] - Delay[s])`` where Delay is the
+    unqueued load + decompress (+ cross-replica link) estimate for the
+    entry's stored bytes — so alpha trades answer quality against
+    seconds of fetch delay. Timestamps (``now``) are simulated seconds
+    from the controller's clock."""
 
     def __init__(self, methods: Dict[str, CompressionMethod],
                  tiers: Dict[str, Tier], tier_order: Sequence[str],
@@ -231,8 +250,11 @@ def _page_depth(key: str) -> int:
     -1 for whole-context entries. Pages of one context are inserted in
     one burst with equal timestamps, so pure LRU can't order them — a
     page is only useful while every EARLIER page of its run is resident,
-    so at equal recency the deepest page should leave first."""
-    if not key.startswith("pg-"):
+    so at equal recency the deepest page should leave first. Remainder
+    entries (``rem-<hash>-<n_pages>``) carry the page COUNT as their
+    index, one past the deepest page: a remainder is only useful while
+    its whole base run is resident, so it is the first to go."""
+    if not key.startswith(("pg-", "rem-")):
         return -1
     _, _, idx = key.rpartition("-")
     return int(idx) if idx.isdigit() else -1

@@ -24,7 +24,11 @@ page) so prefix-sharing requests reuse the matched page run and prefill
 only the suffix; ``--chunk-tokens N`` splits (suffix) prefills into
 N-token chunks interleaved with decode on one unified compute channel
 per replica; ``--affinity`` routes arrivals to the replica whose local
-DRAM holds the longest cached page run (needs ``--split-dram``).
+DRAM holds the longest cached page run (needs ``--split-dram``);
+``--readahead-pages N`` turns on page-level sequential readahead (hot
+page runs staged SSD->DRAM, suffix prefill pipelined with the page
+loads); ``--remainder-cache`` stores the sub-page tail per context so
+exact repeats recompute nothing. Both need ``--paged``.
 """
 from __future__ import annotations
 
@@ -115,10 +119,24 @@ def main(argv=None) -> int:
                     help="route arrivals to the replica whose local DRAM "
                          "holds the longest cached page run (requires "
                          "--split-dram to matter)")
+    ap.add_argument("--readahead-pages", type=int, default=0, metavar="N",
+                    help="page-level sequential readahead: up to N "
+                         "in-flight SSD->DRAM page promotions staged "
+                         "along hot page runs, and suffix prefill "
+                         "pipelined with the page loads (0 disables; "
+                         "requires --paged)")
+    ap.add_argument("--remainder-cache", action="store_true",
+                    help="store the sub-page remainder (T mod page "
+                         "tokens) per context so exact repeats are full "
+                         "hits instead of re-prefilling the tail "
+                         "(requires --paged)")
     ap.add_argument("--serialized", action="store_true",
                     help="use the legacy load-blocking loop (baseline)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if (args.readahead_pages or args.remainder_cache) and not args.paged:
+        ap.error("--readahead-pages and --remainder-cache are page-native "
+                 "features: add --paged")
 
     smoke_cfg = get_config(args.arch, smoke=True)
     full_cfg = get_config(args.arch)
@@ -152,7 +170,9 @@ def main(argv=None) -> int:
                        topology=topology,
                        page_tokens=args.page_tokens if args.paged else 0,
                        chunk_tokens=args.chunk_tokens,
-                       affinity=args.affinity)
+                       affinity=args.affinity,
+                       readahead_pages=args.readahead_pages,
+                       remainder_cache=args.remainder_cache)
     if args.fit_estimator and args.policy == "adaptive":
         fit_quality_estimator(rig, contexts)
         print("quality estimator fitted")
@@ -165,7 +185,10 @@ def main(argv=None) -> int:
     s = summarize(results,
                   chunk_stats=(rig.engine.chunk_stats
                                if args.chunk_tokens and not args.serialized
-                               else None))
+                               else None),
+                  readahead_stats=(rig.engine.readahead_stats
+                                   if args.readahead_pages
+                                   and not args.serialized else None))
     print("\n=== serving summary ===")
     for k, v in s.items():
         print(f"  {k:16s} {v:.4f}" if isinstance(v, float) else
@@ -173,6 +196,8 @@ def main(argv=None) -> int:
     if args.prefetch and not args.serialized:
         for k, v in rig.engine.prefetch_stats.items():
             print(f"  prefetch.{k:10s} {v}")
+    # readahead counters already appear as the summary's readahead_*
+    # keys (summarize is passed readahead_stats above)
     for k, v in rig.controller.stats().items():
         if isinstance(v, (int, float)):
             print(f"  ctrl.{k:14s} {v}")

@@ -58,7 +58,9 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
                  topology: Optional[StorageTopology] = None,
                  page_tokens: int = 0,
                  chunk_tokens: int = 0,
-                 affinity: bool = False) -> EngineRig:
+                 affinity: bool = False,
+                 readahead_pages: int = 0,
+                 remainder_cache: bool = False) -> EngineRig:
     methods = default_registry()
     smoke_cfg = runner.model.cfg
     if topology is None:
@@ -119,7 +121,8 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
                         prefetch_cooldown_s=prefetch_cooldown_s,
                         prefetch_deadline=prefetch_deadline,
                         page_tokens=page_tokens, chunk_tokens=chunk_tokens,
-                        affinity=affinity)
+                        affinity=affinity, readahead_pages=readahead_pages,
+                        remainder_cache=remainder_cache)
     return EngineRig(eng, ctrl, qe, clock)
 
 

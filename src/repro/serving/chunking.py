@@ -24,9 +24,15 @@ synchronous ``total_delay_s`` sum is kept as a property for the
 serialized baseline and unit tests.
 
 Non-token arrays (SSM states) summarize the whole prefix and cannot be
-paged — they ride the sub-page remainder, which is NOT stored.
-``insert_context`` therefore reports kept/remainder token counts (and
-whether state was dropped) so callers account for suffix re-prefill.
+paged — they ride the sub-page remainder. By default the remainder is
+NOT stored and ``insert_context`` reports kept/remainder token counts
+(and whether state was dropped) so callers account for suffix
+re-prefill. With ``remainder=True`` the ``T mod page_tokens`` tail
+(including any SSM state) is stored as a per-context REMAINDER entry
+keyed by the full-context hash (``remainder_key``): an exact repeat then
+matches pages + remainder and recomputes nothing, while any divergence
+— or a missing base page — falls back to the page run alone, so a
+remainder is implicitly invalidated the moment its base run breaks.
 """
 from __future__ import annotations
 
@@ -54,6 +60,20 @@ def page_keys(tokens: np.ndarray, page_tokens: int = PAGE_TOKENS
             tokens[i * page_tokens:(i + 1) * page_tokens]).tobytes())
         keys.append(f"pg-{h.hexdigest()[:16]}-{i}")
     return keys
+
+
+def remainder_key(tokens: np.ndarray, page_tokens: int = PAGE_TOKENS
+                  ) -> Optional[str]:
+    """Storage key of the sub-page remainder of ``tokens``: a hash of
+    the FULL context (so only an exact repeat can match it), suffixed
+    with the page count so the LRU depth tie-break (``_page_depth``)
+    orders it deeper than every base page. None when the context is
+    page-aligned (no remainder)."""
+    n_pages = len(tokens) // page_tokens
+    if len(tokens) - n_pages * page_tokens <= 0:
+        return None
+    h = hashlib.sha1(np.ascontiguousarray(tokens).tobytes())
+    return f"rem-{h.hexdigest()[:16]}-{n_pages}"
 
 
 def split_kv(kv: KVData, page_tokens: int = PAGE_TOKENS
@@ -143,13 +163,18 @@ class PageFetch:
 class FetchPlan:
     """Longest-cached-prefix fetch plan for one request.
 
-    ``src_tokens`` is the SOURCE-token coverage (n_pages * page_tokens):
-    the suffix to prefill starts there. ``n_tokens`` counts the rows the
-    matched pages actually kept (lossy pages shrink)."""
+    ``src_tokens`` is the SOURCE-token coverage (matched pages, plus the
+    remainder when one matched): the suffix to prefill starts there.
+    ``n_tokens`` counts the rows the matched pieces actually kept (lossy
+    pages shrink). A matched remainder entry rides ``pages`` as the
+    final ``PageFetch`` (it is booked on a tier channel like any page)
+    and reports its source-token length in ``remainder_tokens``."""
     pages: List[PageFetch]
     src_tokens: int
     n_tokens: int
     kv: Optional[KVData]            # joined matched pages (decompressed)
+    remainder_tokens: int = 0       # sub-page tail covered by a matched
+    #                                 remainder entry (0: none matched)
 
     @property
     def n_pages(self) -> int:
@@ -176,19 +201,33 @@ class InsertOutcome:
     inserted: int                    # pages newly admitted this call
     pages: int                       # total pages the context splits into
     kept_tokens: int                 # source tokens covered by pages
-    remainder_tokens: int            # sub-page suffix NOT stored — callers
-    #                                  must re-prefill it on every match
+    remainder_tokens: int            # sub-page suffix tokens; stored only
+    #                                  when the cache runs remainder=True
     dropped_state: bool              # the remainder carried non-token
     #                                  (SSM) arrays that were discarded
+    remainder_stored: bool = False   # the tail (incl. any state) was
+    #                                  admitted as a remainder entry
 
 
 class PagedPrefixCache:
-    """Page-granular front-end over an AdaptCacheController."""
+    """Page-granular front-end over an AdaptCacheController.
+
+    Contract: ``insert_context`` and ``match_prefix`` are *placement and
+    planning* calls — they move no simulated time themselves. All
+    returned delays are unqueued per-piece estimates in SECONDS and all
+    sizes are stored BYTES; the serving engine books the actual queueing
+    on the tier ``IOChannel``s. ``now`` is the simulated timestamp used
+    for hit accounting and frequency estimates (falls back to the
+    controller's clock). With ``remainder=True`` the sub-page tail is
+    stored/matched as a per-context remainder entry (see module doc);
+    the remainder only ever matches after a FULL page run."""
 
     def __init__(self, controller: AdaptCacheController,
-                 page_tokens: int = PAGE_TOKENS):
+                 page_tokens: int = PAGE_TOKENS,
+                 remainder: bool = False):
         self.controller = controller
         self.page_tokens = page_tokens
+        self.remainder = remainder
 
     def insert_context(self, tokens: np.ndarray, kv: KVData,
                        task_type: str, now: Optional[float] = None,
@@ -201,13 +240,16 @@ class PagedPrefixCache:
         so topology-aware placement keeps a document's page run local to
         the replica that prefilled it; page write-backs are emitted into
         ``transfers`` like any other insert. The sub-page remainder —
-        including any SSM state, which only lives there — is NOT stored;
-        the returned ``InsertOutcome`` reports exactly how many tokens
-        were kept vs left for suffix re-prefill."""
+        including any SSM state, which only lives there — is stored as a
+        full-context-keyed remainder entry when the cache runs
+        ``remainder=True`` and discarded otherwise; the returned
+        ``InsertOutcome`` reports exactly how many tokens were kept vs
+        left for suffix re-prefill, and whether the tail was stored."""
         keys = page_keys(tokens, self.page_tokens) if keys is None else keys
         t_kv = kv["k" if "k" in kv else "ckv"].shape[1] if (
             "k" in kv or "ckv" in kv) else 0
         n_pages = t_kv // self.page_tokens
+        rem_tokens = t_kv - n_pages * self.page_tokens
         # residency check BEFORE slicing: the common warm path (every
         # page already cached, only the remainder re-prefilled) must not
         # pay an O(context bytes) split/copy just to discard it
@@ -219,11 +261,23 @@ class PagedPrefixCache:
                 self.controller.insert(keys[i], pages[i], task_type,
                                        now=now, transfers=transfers,
                                        replica=replica)
+        rem_stored = False
+        if self.remainder and rem_tokens > 0:
+            rkey = remainder_key(tokens, self.page_tokens)
+            if rkey is not None:
+                if self.controller.lookup(rkey) is None:
+                    self.controller.insert(
+                        rkey, tail_kv(kv, n_pages * self.page_tokens),
+                        task_type, now=now, transfers=transfers,
+                        replica=replica)
+                rem_stored = True
         return InsertOutcome(
             inserted=len(missing), pages=n_pages,
             kept_tokens=n_pages * self.page_tokens,
-            remainder_tokens=t_kv - n_pages * self.page_tokens,
-            dropped_state=any(name not in TOKEN_ARRAYS for name in kv))
+            remainder_tokens=rem_tokens,
+            dropped_state=(not rem_stored
+                           and any(name not in TOKEN_ARRAYS for name in kv)),
+            remainder_stored=rem_stored)
 
     def match_prefix(self, tokens: np.ndarray,
                      now: Optional[float] = None,
@@ -234,8 +288,14 @@ class PagedPrefixCache:
         Each resident page is fetched through the controller (hit
         accounting, frequency updates, remote-hit pricing for pages homed
         on a sibling replica's DRAM) and reported as a ``PageFetch``; the
-        run stops at the first non-resident page. The caller books the
-        page reads on the owning tiers' I/O channels."""
+        run stops at the first non-resident page. When the FULL run
+        matched and the cache stores remainders, the full-context
+        remainder entry is looked up too — a hit appends it as the final
+        ``PageFetch`` and extends ``src_tokens`` to the whole context
+        (an exact repeat recomputes nothing); a broken run never
+        consults the remainder, so evicting any base page implicitly
+        invalidates it. The caller books the piece reads on the owning
+        tiers' I/O channels."""
         keys = page_keys(tokens, self.page_tokens) if keys is None else keys
         fetched: List[Tuple[str, FetchResult]] = []
         for key in keys:
@@ -245,7 +305,19 @@ class PagedPrefixCache:
             if r is None:
                 break
             fetched.append((key, r))
-        self.controller.note_page_run(len(fetched), len(keys))
+        rem_tokens = 0
+        if self.remainder and len(fetched) == len(keys):
+            rkey = remainder_key(tokens, self.page_tokens)
+            if rkey is not None and self.controller.lookup(rkey) is not None:
+                r = self.controller.fetch(rkey, now=now, replica=replica)
+                if r is not None:
+                    fetched.append((rkey, r))
+                    rem_tokens = (len(tokens)
+                                  - len(keys) * self.page_tokens)
+        self.controller.note_page_run(
+            len(fetched) - (1 if rem_tokens else 0), len(keys),
+            run_key=keys[0] if keys else None, keys=keys, now=now,
+            rem_hit=rem_tokens > 0)
         if not fetched:
             return FetchPlan([], 0, 0, None)
         kv = join_kv([f.kv for _, f in fetched])
@@ -255,8 +327,9 @@ class PagedPrefixCache:
                            f.remote, f.xlink_delay_s, f.decompress_delay_s,
                            f.load_delay_s)
                  for key, f in fetched]
-        return FetchPlan(pages, len(fetched) * self.page_tokens,
-                         n_tokens, kv)
+        n_page_hits = len(fetched) - (1 if rem_tokens else 0)
+        return FetchPlan(pages, n_page_hits * self.page_tokens + rem_tokens,
+                         n_tokens, kv, remainder_tokens=rem_tokens)
 
     def local_run(self, tokens: np.ndarray, dram_tier: str,
                   keys: Optional[List[str]] = None) -> int:

@@ -88,8 +88,31 @@ request's context (whole-entry residence when paging is off), falling
 back to least-loaded — attacking the cross-replica hit traffic that
 least-loaded routing produces under split DRAM.
 
-All three features default OFF; the degenerate configuration is
-bit-for-bit the PR-3 event path.
+Sequential readahead (``readahead_pages > 0``, paged mode): the
+prefetcher becomes page-native. At dispatch, a matched page run
+immediately triggers speculative SSD->DRAM promotions for that run's
+slow-resident pages — the pages just read from SSD plus the NEXT pages
+of the chain — queued on the tier channels BEHIND the serving reads; in
+idle time, runs ranked hot by the controller's run-level
+``RunFrequencyEstimator`` are walked the same way before any of their
+pages is requested again. A promotion whose run diverges (a variant's
+chain departs before reaching the page) is cancelled; one demoted
+before any hit counts wasted and cools down. Readahead also turns the
+paged partial-hit path into a fetch-compute PIPELINE: suffix chunks
+issue at dispatch and overlap the page loads (CacheGen-style streaming
+instead of fetch-then-compute), with admission fencing on BOTH the
+final chunk and the last page read.
+
+Remainder caching (``remainder_cache=True``, paged mode): the
+``T mod page_tokens`` tail that the paged path otherwise recomputes on
+every exact repeat is stored as a per-context remainder entry keyed by
+the full-context hash (``serving/chunking.py``); a full page-run match
+then also fetches the remainder and admits with zero prefill
+(``RequestResult.remainder_hit``). A broken base run never consults the
+remainder, so page eviction implicitly invalidates it.
+
+All features default OFF; the degenerate configuration is bit-for-bit
+the PR-4 event path (pinned against the committed fig6 artifacts).
 
 ``process_serialized`` preserves the seed's one-request-at-a-time loop
 (every load blocks the server, inserts land instantly) as the measured
@@ -153,6 +176,8 @@ class RequestResult:
     pages_hit: int = 0               # matched page run length (paged mode)
     tokens_reused_frac: float = 0.0  # source-token coverage of the run:
     #                                  1 - (suffix re-prefilled / context)
+    remainder_hit: bool = False      # full run + remainder entry matched:
+    #                                  the exact repeat recomputed nothing
 
 
 @dataclasses.dataclass
@@ -176,6 +201,12 @@ class _PagedJob:
     t_load_done: float = -1.0        # page loads landed (-1: no pages)
     waiters: List[Tuple[int, Any, float]] = dataclasses.field(
         default_factory=list)        # coalesced: (lane, req, t_coalesce)
+    pipelined: bool = False          # readahead mode: suffix chunks run
+    #                                  CONCURRENTLY with the page loads
+    loads_pending: bool = False      # pipelined: page reads still in
+    #                                  flight (admission fences on them)
+    chunks_done: bool = False        # pipelined: final chunk landed
+    #                                  before the loads did
 
 
 class _Replica(LaneSet):
@@ -193,6 +224,22 @@ class _Replica(LaneSet):
 
 
 class ServingEngine:
+    """Discrete-event AdaptCache serving front end (see module doc).
+
+    Contract: ``process`` consumes a request stream and returns one
+    ``RequestResult`` per request with an additive latency breakdown —
+    ``queue_s + load_s + prefill_s + decode_s == ttft_s`` (all SECONDS
+    of simulated time; byte counts everywhere are stored bytes). Token
+    content is computed for real on the smoke model and is independent
+    of timing knobs. Event ordering at equal timestamps is: load/prefill
+    completions, then arrivals, then decode ticks (a lane freed at t can
+    absorb a request arriving at t; ticks see every admission made at
+    t), then write completions and chunk completions — see
+    ``serving/scheduler.py``. The controller's simulated clock is
+    advanced to each event time before its handler runs, and fetches
+    observe issue time while inserts observe completion time.
+    """
+
     def __init__(self, runner: ModelRunner, controller: AdaptCacheController,
                  time_model: TimeModel, contexts: Sequence[Context],
                  max_new_tokens: int = 24, decode_batch: int = 8,
@@ -205,9 +252,15 @@ class ServingEngine:
                  prefetch_deadline: bool = False,
                  page_tokens: int = 0,
                  chunk_tokens: int = 0,
-                 affinity: bool = False):
+                 affinity: bool = False,
+                 readahead_pages: int = 0,
+                 remainder_cache: bool = False):
         if n_replicas < 1 or n_lanes < 1:
             raise ValueError("need at least one replica with one lane")
+        if (readahead_pages > 0 or remainder_cache) and page_tokens <= 0:
+            raise ValueError(
+                "readahead_pages / remainder_cache are page-native "
+                "features: enable paged serving (page_tokens > 0) first")
         self.runner = runner
         self.controller = controller
         # storage topology: per-replica DRAM routing, cross-replica hit
@@ -255,8 +308,17 @@ class ServingEngine:
                 "summarizes the whole prefix and cannot be split into "
                 "pages")
         self.page_tokens = page_tokens
-        self.paged = (PagedPrefixCache(controller, page_tokens)
+        self.paged = (PagedPrefixCache(controller, page_tokens,
+                                       remainder=remainder_cache)
                       if page_tokens > 0 else None)
+        # sequential readahead: >0 bounds BOTH the in-flight page
+        # promotions and how deep past the matched run the chain is
+        # walked; also switches the partial-hit path to the pipelined
+        # fetch-compute overlap. 0 = PR-4 fetch-then-compute semantics.
+        self.readahead_pages = readahead_pages
+        self.remainder_cache = remainder_cache
+        self.readahead_stats = {"issued": 0, "hits": 0, "wasted": 0,
+                                "cancelled": 0}
         # chunked prefill: suffix prefill splits into chunk_tokens-token
         # chunks on ONE unified compute channel per replica that decode
         # ticks also book (0 = dedicated prefill stream, legacy timing)
@@ -311,6 +373,8 @@ class ServingEngine:
         topo = self.topology
         self.prefetch_stats = {"issued": 0, "hits": 0, "wasted": 0,
                                "suppressed": 0}
+        self.readahead_stats = {"issued": 0, "hits": 0, "wasted": 0,
+                                "cancelled": 0}
         self.chunk_stats = {"chunks_issued": 0, "queue_s": 0.0,
                             "ticks_delayed": 0, "tick_delay_s": 0.0}
         # per-tier channels: duplex tiers get independent read/write
@@ -355,8 +419,15 @@ class ServingEngine:
         # speculative promotions not yet rewarded by a hit
         prefetched: Dict[str, bool] = {}
         # keys barred from re-promotion after a wasted promotion
+        # (shared by entry prefetch and page readahead)
         pf_cooldown: Dict[str, float] = {}
         pf_inflight = [0]
+        # sequential readahead: page key -> run key for promotions not
+        # yet rewarded by a hit; ra_writes marks whose promote Transfer
+        # is still in flight (EV_WRITE_DONE bookkeeping)
+        ra_inflight: Dict[str, str] = {}
+        ra_writes: set = set()
+        ra_count = [0]
         results: List[RequestResult] = []
 
         def note(now: float, kind: str, **info) -> None:
@@ -385,6 +456,15 @@ class ServingEngine:
                 ready_at[tr.key] = max(ready_at.get(tr.key, 0.0), done)
                 if tr.kind == "demote" and prefetched.pop(tr.key, None):
                     self.prefetch_stats["wasted"] += 1
+                    pf_cooldown[tr.key] = now + self.prefetch_cooldown_s
+                elif (tr.kind in ("demote", "insert")
+                        and ra_inflight.pop(tr.key, None) is not None):
+                    # readahead promotion destroyed before any request
+                    # used it: demoted back out, or — since evictions
+                    # emit no Transfer — evicted and freshly re-inserted
+                    # (the re-inserted page must not later be credited
+                    # as a readahead hit). Wasted slow-channel bandwidth.
+                    self.readahead_stats["wasted"] += 1
                     pf_cooldown[tr.key] = now + self.prefetch_cooldown_s
                 note(now, "write_issue", key=tr.key, move=tr.kind,
                      tier=tr.dst_tier, nbytes=tr.nbytes, done=done,
@@ -448,6 +528,60 @@ class ServingEngine:
                  predicted_gap_s=1.0 / hz)
             return False
 
+        def readahead_run(now: float, rep: _Replica, run_key: str,
+                          chain: List[str], idle_only: bool) -> None:
+            """Walk ``chain`` in page order and promote its slow-tier
+            residents into the acting replica's DRAM (sequential
+            readahead), up to ``readahead_pages`` promotions in flight
+            engine-wide. ``idle_only`` (the hot-run background walk)
+            skips pages whose source channel is busy serving; the
+            dispatch-time walk queues BEHIND the serving reads it just
+            booked. The controller's displacement guard arbitrates every
+            move, and wasted/cancelled promotions cool the key down like
+            entry prefetch."""
+            for key in chain:
+                if ra_count[0] >= self.readahead_pages:
+                    return
+                tier = self.controller.lookup(key)
+                if tier is None or is_dram(tier):
+                    continue         # a gap re-fills at insert time
+                if (key in ra_inflight or ready_at.get(key, 0.0) > now
+                        or pf_cooldown.get(key, 0.0) > now):
+                    continue
+                if idle_only and channels[tier].queue_depth(now) > 0:
+                    return           # don't contend with serving reads
+                transfers: List[Transfer] = []
+                tr = self.controller.promote(key, now=now,
+                                             transfers=transfers,
+                                             dst_tier=dram_of(rep))
+                if tr is None:       # displacement unsafe
+                    continue
+                ra_inflight[key] = run_key
+                ra_writes.add(key)
+                ra_count[0] += 1
+                self.readahead_stats["issued"] += 1
+                note(now, "readahead_issue", key=key, run=run_key,
+                     src=tr.src_tier, dst=tr.dst_tier, nbytes=tr.nbytes)
+                book(now, transfers, "readahead")
+
+        def maybe_readahead(now: float, rep: Optional[_Replica] = None
+                            ) -> None:
+            """Background half of sequential readahead: walk the runs
+            the controller's run-level FrequencyEstimator ranks hottest
+            and stage their next pages into DRAM before any request
+            needs them, using idle slow-channel time only."""
+            if self.readahead_pages <= 0 or self.paged is None:
+                return
+            if ra_count[0] >= self.readahead_pages:
+                return              # budget full: skip the candidate scan
+            reps = [rep] if rep is not None else list(replicas)
+            for run_key, chain in self.controller.run_candidates(
+                    now=now, limit=8, min_hz=self.prefetch_min_hz):
+                if ra_count[0] >= self.readahead_pages:
+                    return
+                for r in reps:
+                    readahead_run(now, r, run_key, chain, idle_only=True)
+
         def maybe_prefetch(now: float, rep: Optional[_Replica] = None
                            ) -> None:
             """Use idle slow-tier read-channel time to promote hot
@@ -456,7 +590,9 @@ class ServingEngine:
             replica-local under a split-DRAM topology: each replica
             promotes into its OWN DRAM (``rep`` names the acting
             replica; None — e.g. a write completion — tries every
-            replica in turn)."""
+            replica in turn). Page-run readahead rides the same idle
+            trigger but its own in-flight budget."""
+            maybe_readahead(now, rep)
             if self.prefetch_max_inflight <= 0:
                 return
             reps = [rep] if rep is not None else list(replicas)
@@ -571,7 +707,10 @@ class ServingEngine:
         def launch_job(job: _PagedJob, plan, now: float) -> None:
             """Book the matched pages' reads on their owning tiers'
             channels (fencing on in-flight writes per page), then chain
-            into the suffix chunks at load completion."""
+            into the suffix chunks at load completion — or, in readahead
+            mode, issue the chunks IMMEDIATELY so compute overlaps the
+            page I/O (fetch-compute pipeline) and fence the admission on
+            whichever side finishes last."""
             rep = job.rep
             if plan is not None and plan.n_pages:
                 t_done, wait = now, 0.0
@@ -587,6 +726,10 @@ class ServingEngine:
                      nbytes=plan.nbytes, done=t_done)
                 if job.chunks:
                     rep.inflight[job.req.context_key] = job
+                    if self.readahead_pages > 0:
+                        job.pipelined = True
+                        job.loads_pending = True
+                        issue_chunk(job, now)
                 loop.push(t_done, EV_LOAD_DONE, job)
             else:
                 job.t_load_done = now
@@ -619,6 +762,24 @@ class ServingEngine:
             plan = self.paged.match_prefix(ctx.tokens, now=now,
                                            replica=rep.idx, keys=keys)
             suffix = t_ctx - plan.src_tokens
+            if self.readahead_pages > 0 and keys:
+                # the run diverged: in-flight readahead for pages the
+                # latest trajectory no longer reaches is cancelled (the
+                # promoted bytes stay where they landed; the key cools
+                # down so the stale branch is not re-staged)
+                chain = set(keys)
+                for k, rk in list(ra_inflight.items()):
+                    if rk == keys[0] and k not in chain:
+                        ra_inflight.pop(k)
+                        # a page the LRU already evicted outright (no
+                        # Transfer, never re-inserted) was wasted, not
+                        # cancelled — its bytes are gone either way
+                        if self.controller.lookup(k) is None:
+                            self.readahead_stats["wasted"] += 1
+                        else:
+                            self.readahead_stats["cancelled"] += 1
+                        pf_cooldown[k] = now + self.prefetch_cooldown_s
+                        note(now, "readahead_cancel", key=k, run=rk)
             # a full page-run hit never touches the real-compute prefill:
             # the lane content comes entirely from the fetched pages
             if plan.n_pages == 0:
@@ -635,6 +796,9 @@ class ServingEngine:
                     if (is_dram(p.tier)
                             and prefetched.pop(p.key, None) is not None):
                         pf_hit = True
+                    if (is_dram(p.tier)
+                            and ra_inflight.pop(p.key, None) is not None):
+                        self.readahead_stats["hits"] += 1
                 if pf_hit:
                     self.prefetch_stats["hits"] += 1
                 # attribute the hit to the SLOWEST tier in the run (the
@@ -646,8 +810,12 @@ class ServingEngine:
                        "rate": plan.n_tokens / max(1, plan.src_tokens),
                        "remote_hit": any(p.remote for p in plan.pages),
                        "prefetch_hit": pf_hit,
-                       "pages_hit": plan.n_pages,
-                       "tokens_reused_frac": plan.src_tokens / t_ctx}
+                       # a matched remainder rides plan.pages but is not
+                       # a page — pages_hit stays the true run length
+                       "pages_hit": plan.n_pages
+                       - (1 if plan.remainder_tokens else 0),
+                       "tokens_reused_frac": plan.src_tokens / t_ctx,
+                       "remainder_hit": plan.remainder_tokens > 0}
             else:
                 rec = {"hit_tier": None, "method": "none", "rate": 1.0}
             job = _PagedJob(rep, lane, req, ctx, kv_final, t_ctx, now, rec,
@@ -655,6 +823,13 @@ class ServingEngine:
                             insert_task=(ctx.task_type if suffix > 0
                                          else None))
             launch_job(job, plan, now)
+            # sequential readahead, dispatch half: stage this run's
+            # slow-resident pages (the SSD pages just read + the NEXT
+            # pages of the chain) behind the serving reads. ``keys`` can
+            # be empty on a remainder-only match of a sub-page context —
+            # no run to walk then.
+            if self.readahead_pages > 0 and plan.n_pages and keys:
+                readahead_run(now, rep, keys[0], keys, idle_only=False)
 
         def dispatch(rep: _Replica, lane: int, req: Request,
                      now: float) -> None:
@@ -752,14 +927,22 @@ class ServingEngine:
                      remaining=len(job.chunks) - job.ci)
                 if job.ci < len(job.chunks):
                     issue_chunk(job, now)
+                elif job.pipelined and job.loads_pending:
+                    job.chunks_done = True  # compute beat the page I/O;
+                    #                         admission fences on the loads
                 else:
                     finish_job(job, now)
 
             elif kind == EV_LOAD_DONE and isinstance(payload, _PagedJob):
                 job = payload
                 job.t_load_done = now
-                if job.chunks:          # suffix prefill starts only once
-                    issue_chunk(job, now)   # the matched pages landed
+                if job.pipelined:
+                    job.loads_pending = False
+                    if job.chunks_done:     # compute already finished
+                        finish_job(job, now)
+                    # else: the in-flight chunk chain admits the job
+                elif job.chunks:        # fetch-then-compute: the suffix
+                    issue_chunk(job, now)   # starts once the pages landed
                 else:
                     finish_job(job, now)    # pure page hit
 
@@ -796,7 +979,11 @@ class ServingEngine:
                 if ready_at.get(tr.key, 0.0) <= now:
                     ready_at.pop(tr.key, None)
                 if tr.kind == "promote":
-                    pf_inflight[0] -= 1
+                    if tr.key in ra_writes:     # readahead budget, not
+                        ra_writes.discard(tr.key)   # the entry-prefetch one
+                        ra_count[0] -= 1
+                    else:
+                        pf_inflight[0] -= 1
                 note(now, "write_done", key=tr.key, move=tr.kind,
                      tier=tr.dst_tier, cause=cause)
                 maybe_prefetch(now)
@@ -833,7 +1020,8 @@ class ServingEngine:
                         remote_hit=rec.get("remote_hit", False),
                         pages_hit=rec.get("pages_hit", 0),
                         tokens_reused_frac=rec.get("tokens_reused_frac",
-                                                   0.0)))
+                                                   0.0),
+                        remainder_hit=rec.get("remainder_hit", False)))
                 issue(rep, now)
                 maybe_prefetch(now, rep)
 
@@ -904,7 +1092,8 @@ class ServingEngine:
 
 def summarize(results: Sequence[RequestResult],
               prefetch_stats: Optional[Dict[str, int]] = None,
-              chunk_stats: Optional[Dict[str, float]] = None
+              chunk_stats: Optional[Dict[str, float]] = None,
+              readahead_stats: Optional[Dict[str, int]] = None
               ) -> Dict[str, float]:
     if not results:
         return {"n": 0}
@@ -948,12 +1137,19 @@ def summarize(results: Sequence[RequestResult],
              and (r.wb_queue_s > 0 or r.wb_transfer_s > 0)]),
         # page-granular reuse: matched run length, source-token coverage
         # and the share of requests that reused SOME pages but still had
-        # to prefill a suffix (the partial-prefix hits paging unlocks)
+        # to recompute a suffix (the partial-prefix hits paging unlocks).
+        # Partiality is judged by coverage, not prefill_s: the pipelined
+        # readahead path can fully overlap the suffix compute with page
+        # loads, reporting prefill_s == 0 for a genuinely partial hit.
         "pages_hit_mean": float(np.mean([r.pages_hit for r in results])),
         "tokens_reused_frac_mean": float(
             np.mean([r.tokens_reused_frac for r in results])),
-        "partial_hit_rate": sum(r.pages_hit > 0 and r.prefill_s > 0
-                                for r in results) / n,
+        "partial_hit_rate": sum(
+            r.pages_hit > 0 and r.tokens_reused_frac < 1.0
+            for r in results) / n,
+        # remainder caching: exact repeats whose sub-page tail was served
+        # from a remainder entry instead of being recomputed
+        "remainder_hit_rate": sum(r.remainder_hit for r in results) / n,
     }
     if prefetch_stats is not None:
         # engine-level prefetch counters (issued / hits / wasted /
@@ -963,4 +1159,9 @@ def summarize(results: Sequence[RequestResult],
         # chunked-prefill interleave counters: chunks booked, compute
         # queueing they saw, and decode ticks pushed behind a chunk
         out.update({f"chunk_{k}": v for k, v in chunk_stats.items()})
+    if readahead_stats is not None:
+        # sequential-readahead counters: page promotions issued / hit /
+        # wasted (demoted unused) / cancelled (run diverged)
+        out.update({f"readahead_{k}": v
+                    for k, v in readahead_stats.items()})
     return out

@@ -87,6 +87,10 @@ class IOChannel:
     ``concurrency`` parallel streams and returns its completion time; a
     stream busy past ``now`` queues the transfer behind the in-flight one.
     Shared across engine replicas, so replicas contend for the same SSD.
+    Every byte movement in the engine arbitrates here — serving fetches,
+    per-page partial-prefix loads, insert write-backs, MCKP moves, and
+    the speculative prefetch / page-readahead promotions (which check
+    ``queue_depth`` first so background traffic rides idle time only).
     """
 
     def __init__(self, name: str, bandwidth_bps: float, latency_s: float,

@@ -54,6 +54,13 @@ class StorageTopology:
                      pays when the entry lives in a *sibling* replica's
                      DRAM (NIC/interconnect, not PCIe).
     ``xlink_latency_s``  per-copy latency of that link.
+
+    Contract: the topology is immutable (frozen dataclass) and purely
+    descriptive — it books no time and owns no bytes. Bandwidths are
+    BYTES/SECOND, latencies SECONDS, ``cross_delay`` returns seconds for
+    a stored-byte count; naming/identity helpers are total functions
+    over the tier names they themselves generate and raise ValueError
+    on anything else.
     """
 
     replicas: int = 1

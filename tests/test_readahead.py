@@ -1,0 +1,428 @@
+"""Page-level sequential readahead + remainder caching: remainder
+insert/match/invalidation, run-level frequency signals, engine readahead
+issue/hit/cancel/waste accounting, the pipelined fetch-compute overlap,
+byte conservation with promotions in flight, and the knobs-off
+degenerate path pinned against the committed fig6 numbers."""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.compression import default_registry
+from repro.core.controller import AdaptCacheController, SimClock
+from repro.core.estimator import (
+    DEFAULT_DECOMPRESS_BPS, DelayProfile, FrequencyEstimator,
+    RunFrequencyEstimator,
+)
+from repro.core.policy import FixedPolicy, Move, _page_depth
+from repro.models import build_model
+from repro.serving.baselines import build_engine
+from repro.serving.chunking import (
+    PagedPrefixCache, page_keys, remainder_key,
+)
+from repro.serving.engine import ServingEngine, summarize
+from repro.serving.runner import ModelRunner
+from repro.serving.workload import (
+    Request, make_prefix_sharing_contexts,
+)
+from repro.storage.tier import DRAMTier, DeviceSpec, SSDTier
+from repro.storage.topology import StorageTopology
+
+FULL = "adaptcache-8b"
+N_ACTIVE = 8_030_000_000
+RNG = np.random.RandomState(17)
+
+
+@pytest.fixture(scope="module")
+def runner():
+    cfg = get_config(FULL, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return ModelRunner(model, params, capacity=256)
+
+
+def _controller(tmp, dram_bytes=64 << 20):
+    methods = default_registry()
+    topo = StorageTopology()
+    tiers = {"dram": DRAMTier(DeviceSpec("dram", dram_bytes, 16e9, 16e9),
+                              name="dram"),
+             "ssd": SSDTier(DeviceSpec("ssd", 64 << 20, 1e9, 1e9),
+                            root=str(tmp))}
+    order = topo.tier_names
+    return AdaptCacheController(
+        methods, tiers, order,
+        FixedPolicy(methods, order, "none", 1.0, topology=topo),
+        DelayProfile(dict(DEFAULT_DECOMPRESS_BPS)),
+        FrequencyEstimator(), clock=SimClock(), topology=topo)
+
+
+def _synthetic_kv(t, with_state=False):
+    kv = {"k": RNG.randn(2, t, 8).astype(np.float32),
+          "v": RNG.randn(2, t, 8).astype(np.float32),
+          "positions": np.arange(t, dtype=np.int32)}
+    if with_state:
+        kv["ssm"] = RNG.randn(2, 4, 4).astype(np.float32)
+        kv["conv"] = RNG.randn(2, 3, 4).astype(np.float32)
+    return kv
+
+
+# ---------------------------------------------------------------------------
+# remainder entries: insert, exact-repeat match, invalidation
+# ---------------------------------------------------------------------------
+
+def test_remainder_key_alignment():
+    toks = RNG.randint(0, 1000, 100).astype(np.int32)
+    rk = remainder_key(toks, 32)
+    assert rk is not None and rk.startswith("rem-") and rk.endswith("-3")
+    assert _page_depth(rk) == 3 > _page_depth("pg-x-2")
+    # page-aligned contexts have no remainder
+    assert remainder_key(toks[:96], 32) is None
+    # the key commits to the FULL context: any token change re-keys it
+    other = toks.copy()
+    other[50] += 1
+    assert remainder_key(other, 32) != rk
+
+
+def test_remainder_stored_and_matched_exactly(tmp_path):
+    """remainder=True stores the sub-page tail (with SSM state) keyed by
+    the full-context hash; an exact repeat matches pages + remainder and
+    reconstructs the original KV bit-for-bit, while a divergent tail
+    falls back to the page run alone."""
+    ctrl = _controller(tmp_path)
+    paged = PagedPrefixCache(ctrl, page_tokens=32, remainder=True)
+    toks = RNG.randint(0, 1000, 100).astype(np.int32)
+    kv = _synthetic_kv(100, with_state=True)
+
+    out = paged.insert_context(toks, kv, "qa", now=0.0)
+    assert out.remainder_stored and not out.dropped_state
+    assert out.remainder_tokens == 4
+    assert ctrl.lookup(remainder_key(toks, 32)) is not None
+
+    plan = paged.match_prefix(toks, now=1.0)
+    assert plan.src_tokens == 100 and plan.remainder_tokens == 4
+    assert plan.n_pages == 4                 # 3 pages + the remainder
+    for name in kv:
+        np.testing.assert_array_equal(plan.kv[name], kv[name])
+
+    divergent = toks.copy()
+    divergent[97:] = RNG.randint(1000, 2000, 3)
+    p2 = paged.match_prefix(divergent, now=2.0)
+    assert p2.src_tokens == 96 and p2.remainder_tokens == 0
+
+
+def test_remainder_off_keeps_pr4_semantics(tmp_path):
+    """Default remainder=False: the tail is dropped exactly as in PR 4
+    (state discarded, nothing stored under the remainder key)."""
+    ctrl = _controller(tmp_path)
+    paged = PagedPrefixCache(ctrl, page_tokens=32)
+    toks = RNG.randint(0, 1000, 70).astype(np.int32)
+    out = paged.insert_context(toks, _synthetic_kv(70, with_state=True),
+                               "qa", now=0.0)
+    assert not out.remainder_stored and out.dropped_state
+    assert ctrl.lookup(remainder_key(toks, 32)) is None
+    plan = paged.match_prefix(toks, now=1.0)
+    assert plan.src_tokens == 64 and plan.remainder_tokens == 0
+
+
+def test_remainder_invalidated_when_base_pages_evicted(tmp_path):
+    """A remainder is only valid on top of its FULL base run: evicting
+    any base page must stop match_prefix from using it, even though the
+    remainder entry itself is still resident."""
+    ctrl = _controller(tmp_path)
+    paged = PagedPrefixCache(ctrl, page_tokens=32, remainder=True)
+    toks = RNG.randint(0, 1000, 100).astype(np.int32)
+    paged.insert_context(toks, _synthetic_kv(100), "qa", now=0.0)
+    keys = page_keys(toks, 32)
+    meta = ctrl.meta[keys[1]]
+    ctrl.executor.apply(Move(keys[1], "evict", meta.tier), meta)
+
+    rk = remainder_key(toks, 32)
+    assert ctrl.lookup(rk) is not None       # still resident ...
+    plan = paged.match_prefix(toks, now=1.0)
+    assert plan.n_pages == 1                 # ... but never consulted
+    assert plan.remainder_tokens == 0
+    assert plan.src_tokens == 32
+
+
+def test_remainder_evicts_before_its_base_pages():
+    """LRU depth tie-break: at equal recency the remainder (depth ==
+    page count) leaves before any base page of its run."""
+    from repro.core.entry import EntryMeta
+    metas = [EntryMeta("pg-x-0", "qa", 1, 1, 0.0, created_at=5.0,
+                       tier="dram", nbytes=1),
+             EntryMeta("rem-x-3", "qa", 1, 1, 0.0, created_at=5.0,
+                       tier="dram", nbytes=1),
+             EntryMeta("pg-x-2", "qa", 1, 1, 0.0, created_at=5.0,
+                       tier="dram", nbytes=1)]
+    methods = default_registry()
+    pol = FixedPolicy(methods, ["dram", "ssd"], "none", 1.0)
+    mv = pol.pick_move("dram", metas, now=9.0)
+    assert mv.key == "rem-x-3"
+
+
+# ---------------------------------------------------------------------------
+# run-level frequency + controller candidates
+# ---------------------------------------------------------------------------
+
+def test_run_frequency_estimator_tracks_runs():
+    rf = RunFrequencyEstimator(halflife_s=10.0)
+    rf.note_run("run-a", 0.0)
+    rf.note_run("run-a", 1.0)
+    rf.note_run("run-b", 1.0)
+    # run-a saw a hit (1 Hz instantaneous) on top of the prior; run-b
+    # only the optimistic prior — a must rank hotter
+    assert rf.predict("run-a", 1.0) > rf.predict("run-b", 1.0)
+    rf.forget("run-a")
+    assert not rf.seen("run-a")
+    # decayed-away runs rank below fresh ones
+    assert rf.predict("run-b", 100.0) < rf.predict("run-b", 1.0)
+
+
+def test_controller_run_candidates(tmp_path):
+    ctrl = _controller(tmp_path)
+    paged = PagedPrefixCache(ctrl, page_tokens=32)
+    hot = RNG.randint(0, 1000, 96).astype(np.int32)
+    cold = RNG.randint(1000, 2000, 96).astype(np.int32)
+    paged.insert_context(hot, _synthetic_kv(96), "qa", now=0.0)
+    paged.insert_context(cold, _synthetic_kv(96), "qa", now=0.0)
+    for t in (1.0, 1.5, 2.0, 2.5):
+        paged.match_prefix(hot, now=t)
+    paged.match_prefix(cold, now=2.0)
+    cands = ctrl.run_candidates(now=3.0)
+    assert [rk for rk, _ in cands][0] == page_keys(hot, 32)[0]
+    # the stored chain is the latest observed trajectory for the run
+    assert dict(cands)[page_keys(hot, 32)[0]] == page_keys(hot, 32)
+    # min_hz filters cold runs out entirely
+    hot_hz = ctrl.run_freq.predict(page_keys(hot, 32)[0], 3.0)
+    assert all(rk == page_keys(hot, 32)[0]
+               for rk, _ in ctrl.run_candidates(now=3.0, min_hz=hot_hz))
+
+
+def test_byte_conservation_with_promotion_in_flight(tmp_path):
+    """Placement decisions are instantaneous on the data plane: while a
+    promotion Transfer is still queued (time cost unpaid), per-tier used
+    bytes must already equal the sum of resident entry sizes."""
+    ctrl = _controller(tmp_path, dram_bytes=20 << 10)
+    paged = PagedPrefixCache(ctrl, page_tokens=32)
+    chains = []
+    for i in range(6):
+        toks = RNG.randint(0, 1000, 96).astype(np.int32)
+        chains.append(toks)
+        paged.insert_context(toks, _synthetic_kv(96), "qa", now=float(i))
+    slow = [k for k, m in ctrl.meta.items() if m.tier == "ssd"]
+    assert slow, "warm-up should have demoted pages to the SSD"
+    for t in (6.0, 6.5, 7.0, 7.5):       # heat the key past the guard
+        ctrl.fetch(slow[0], now=t)
+    transfers = []
+    tr = ctrl.promote(slow[0], now=10.0, transfers=transfers)
+    assert tr is not None and transfers
+    for tname, tier in ctrl.tiers.items():
+        resident = sum(m.nbytes for m in ctrl.meta.values()
+                       if m.tier == tname)
+        assert tier.used_bytes == resident, tname
+
+
+# ---------------------------------------------------------------------------
+# engine: readahead issue / hit / cancel, pipelined fetch-compute
+# ---------------------------------------------------------------------------
+
+def _prefix_contexts(vocab):
+    rng = np.random.RandomState(29)
+    # 240 tokens = 3 pages of 64 + a 48-token sub-page tail; a doc's
+    # variants share pages 0-1 and diverge in page 2 + the tail
+    return make_prefix_sharing_contexts(rng, vocab, n_docs=3, n_variants=3,
+                                        prefix_len=128, suffix_len=112,
+                                        n_probes=2)
+
+
+def _skewed(contexts, n, gap):
+    # doc 0's variants take 3/4 of the traffic: its run ranks hot and a
+    # promoted divergent page gets re-requested before being cancelled
+    cycle = [0, 1, 2, 3, 0, 1, 2, 6, 0, 1, 2, 4]
+    return [Request(i, contexts[cycle[i % len(cycle)]].key,
+                    contexts[cycle[i % len(cycle)]].probes[0],
+                    (i + 1) * gap,
+                    contexts[cycle[i % len(cycle)]].task_type, 4)
+            for i in range(n)]
+
+
+def _rig(runner, contexts, tmp, *, readahead=0, remainder=False, chunk=32):
+    return build_engine(runner, contexts, get_config(FULL), N_ACTIVE,
+                        policy=("none", 1.0), dram_entries=2.5,
+                        ssd_entries=50.0, n_lanes=2, ssd_root=str(tmp),
+                        page_tokens=64, chunk_tokens=chunk,
+                        readahead_pages=readahead,
+                        remainder_cache=remainder)
+
+
+def _warm(rig, runner, contexts):
+    for c in contexts:
+        rig.engine.paged.insert_context(
+            c.tokens, runner.prefill_entry(c.tokens), c.task_type, now=0.0)
+
+
+def test_readahead_end_to_end(runner, tmp_path):
+    """Readahead on a warm SSD-heavy page set: promotions are issued and
+    rewarded by DRAM page hits, diverging variant runs cancel stale
+    promotions, token content is unchanged, the suffix chunks overlap
+    the page loads (pipeline), and bytes are conserved per tier."""
+    contexts = _prefix_contexts(runner.model.cfg.vocab_size)
+    reqs = _skewed(contexts, 20, 0.02)
+
+    rig_off = _rig(runner, contexts, tmp_path / "off")
+    _warm(rig_off, runner, contexts)
+    res_off = rig_off.engine.process(reqs, skip_quality=True)
+
+    rig_ra = _rig(runner, contexts, tmp_path / "ra", readahead=4)
+    _warm(rig_ra, runner, contexts)
+    res_ra = rig_ra.engine.process(reqs, skip_quality=True)
+
+    assert [r.answer for r in res_ra] == [r.answer for r in res_off]
+    ra = rig_ra.engine.readahead_stats
+    assert ra["issued"] > 0 and ra["hits"] > 0
+    assert ra["cancelled"] > 0          # the sibling variant diverged
+    s_off, s_ra = summarize(res_off), summarize(res_ra)
+    assert s_ra["hit_rate_dram"] > s_off["hit_rate_dram"]
+    assert s_ra["ttft_mean_s"] < s_off["ttft_mean_s"]
+    # knobs off books no readahead and pays fetch-then-compute
+    assert rig_off.engine.readahead_stats["issued"] == 0
+
+    kinds = [k for _, k, _ in rig_ra.engine.last_trace]
+    assert "readahead_issue" in kinds and "readahead_cancel" in kinds
+    # pipelined fetch-compute: some request issued its first suffix
+    # chunk BEFORE its page loads completed
+    chunk_t = {}
+    for t, k, info in rig_ra.engine.last_trace:
+        if k == "chunk_issue" and info["req_id"] not in chunk_t:
+            chunk_t[info["req_id"]] = t
+    overlapped = [info for t, k, info in rig_ra.engine.last_trace
+                  if k == "page_load_issue"
+                  and info["req_id"] in chunk_t
+                  and info["done"] > chunk_t[info["req_id"]]]
+    assert overlapped, "no suffix chunk overlapped its page loads"
+
+    for rig in (rig_off, rig_ra):
+        for tname, tier in rig.controller.tiers.items():
+            resident = sum(m.nbytes for m in rig.controller.meta.values()
+                           if m.tier == tname)
+            assert tier.used_bytes == resident, tname
+
+
+def test_remainder_cache_end_to_end(runner, tmp_path):
+    """remainder_cache=True: exact repeats match pages + remainder and
+    admit with ZERO prefill; answers are identical to the knobs-off
+    engine; summarize reports the remainder hit share."""
+    contexts = _prefix_contexts(runner.model.cfg.vocab_size)
+    reqs = _skewed(contexts, 12, 0.03)
+
+    rig_off = _rig(runner, contexts, tmp_path / "off")
+    _warm(rig_off, runner, contexts)
+    res_off = rig_off.engine.process(reqs, skip_quality=True)
+
+    rig_rem = _rig(runner, contexts, tmp_path / "rem", readahead=2,
+                   remainder=True)
+    _warm(rig_rem, runner, contexts)
+    res_rem = rig_rem.engine.process(reqs, skip_quality=True)
+
+    assert [r.answer for r in res_rem] == [r.answer for r in res_off]
+    full_hits = [r for r in res_rem if r.remainder_hit]
+    assert full_hits, "no exact repeat matched its remainder entry"
+    for r in full_hits:
+        assert r.prefill_s == 0.0 and r.tokens_reused_frac == 1.0
+        assert r.pages_hit == 3          # TRUE run length: the matched
+        #                                  remainder is not a page
+    s = summarize(res_rem)
+    assert s["remainder_hit_rate"] > 0
+    assert (s["tokens_reused_frac_mean"]
+            > summarize(res_off)["tokens_reused_frac_mean"])
+    assert sum(r.prefill_s for r in res_rem) \
+        < sum(r.prefill_s for r in res_off)
+
+
+def test_subpage_context_remainder_only_match(runner, tmp_path):
+    """A context SHORTER than one page has an empty page chain; with
+    remainder_cache its whole KV lives in one remainder entry. A repeat
+    must be served as a remainder-only full hit — and readahead must
+    not trip over the empty chain (regression: IndexError on keys[0])."""
+    cfg = runner.model.cfg
+    rng = np.random.RandomState(31)
+    from repro.serving.workload import Context
+    toks = rng.randint(8, cfg.vocab_size - 8, 40).astype(np.int32)
+    contexts = [Context("tiny-0", "qa", toks,
+                        [np.array([6, int(toks[1])], dtype=np.int32)])]
+    rig = _rig(runner, contexts, tmp_path, readahead=2, remainder=True)
+    reqs = [Request(i, "tiny-0", contexts[0].probes[0],
+                    0.02 * (i + 1), "qa", 4) for i in range(3)]
+    res = rig.engine.process(reqs, skip_quality=True)
+    assert len(res) == 3
+    repeats = [r for r in res if r.remainder_hit]
+    assert repeats, "repeat of a sub-page context should match remainder"
+    for r in repeats:
+        assert r.pages_hit == 0 and r.tokens_reused_frac == 1.0
+        assert r.prefill_s == 0.0
+
+
+def test_summarize_readahead_fields():
+    s = summarize([], readahead_stats={"issued": 3, "hits": 1,
+                                       "wasted": 1, "cancelled": 1})
+    assert s == {"n": 0}                 # empty results short-circuit
+    from repro.serving.engine import RequestResult
+    r = RequestResult(0, "c", "qa", 0.0, 1.0, 0.0, 0.0, 0.0, "dram",
+                      "paged", 1.0, 1.0, [1], remainder_hit=True)
+    s = summarize([r], readahead_stats={"issued": 3, "hits": 1,
+                                        "wasted": 1, "cancelled": 1})
+    assert s["remainder_hit_rate"] == 1.0
+    assert s["readahead_issued"] == 3 and s["readahead_cancelled"] == 1
+
+
+def test_engine_rejects_page_native_knobs_without_paging(runner):
+    cfg = get_config(FULL, smoke=True)
+    contexts = _prefix_contexts(cfg.vocab_size)
+    with pytest.raises(ValueError, match="page-native"):
+        build_engine(runner, contexts, get_config(FULL), N_ACTIVE,
+                     policy=("none", 1.0), page_tokens=0,
+                     readahead_pages=2)
+    with pytest.raises(ValueError, match="page-native"):
+        build_engine(runner, contexts, get_config(FULL), N_ACTIVE,
+                     policy=("none", 1.0), page_tokens=0,
+                     remainder_cache=True)
+
+
+# ---------------------------------------------------------------------------
+# degenerate path: readahead/remainder off == committed fig6
+# ---------------------------------------------------------------------------
+
+def test_degenerate_reproduces_committed_fig6(runner):
+    """With readahead and remainder caching off, the paged engine must
+    be bit-for-bit the PR-4 path: rebuild fig6's 'paged' configuration
+    and match the committed experiments/fig6_paging.csv row exactly
+    (to the CSV's 1e-6 precision)."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    csv = os.path.join(root, "experiments", "fig6_paging.csv")
+    if not os.path.exists(csv):
+        pytest.skip("no committed fig6 artifact")
+    sys.path.insert(0, os.path.join(root, "benchmarks"))
+    try:
+        import fig6_paging as f6
+        from artifacts import load_committed_row
+    finally:
+        sys.path.pop(0)
+    from repro.serving.workload import round_robin_requests
+
+    rng = np.random.RandomState(11)
+    cfg = get_config(f6.ARCH, smoke=True)
+    contexts = make_prefix_sharing_contexts(
+        rng, cfg.vocab_size, n_docs=3, n_variants=4,
+        prefix_len=2 * f6.PAGE, suffix_len=f6.PAGE, n_probes=2)
+    requests = round_robin_requests(contexts, 30, f6.GAP_S,
+                                    max_new_tokens=8)
+    s, _, _ = f6.run_mode(runner, contexts, get_config(f6.ARCH), requests,
+                          page=f6.PAGE, chunk=0, replicas=1, split=False,
+                          affinity=False, label="degen", skip_quality=True)
+
+    ref = load_committed_row(csv, "paged", "benchmarks/fig6_paging.py")
+    for key in f6.CSV_KEYS:
+        assert abs(s[key] - ref[key]) <= 1.5e-6, (key, s[key], ref[key])

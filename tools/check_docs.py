@@ -1,0 +1,109 @@
+"""Docs consistency gate (CI `docs` job; also run by tests/test_docs.py).
+
+Two checks, zero third-party deps:
+
+1. **Markdown link check** — every relative link target in README.md
+   and docs/*.md must exist on disk (http/https/mailto links and pure
+   in-page anchors are skipped; an anchor suffix on a file link is
+   checked for file existence only).
+2. **Flag-sync check** — every `--flag` registered by
+   `src/repro/launch/serve.py`'s argparse parser must appear verbatim
+   in README.md's flag reference, and every `--flag` the README
+   mentions in its flag table must exist in serve.py (drift in either
+   direction fails the build). Parsed by regex so the check needs no
+   jax import.
+
+Exit status 0 = clean; 1 = problems (listed on stderr).
+
+    python tools/check_docs.py [repo_root]
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FLAG_RE = re.compile(r"add_argument\(\s*\n?\s*\"(--[a-z0-9][a-z0-9-]*)\"")
+MD_FLAG_RE = re.compile(r"`(--[a-z0-9][a-z0-9-]*)`")
+
+
+def md_files(root: str):
+    out = [os.path.join(root, "README.md")]
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        out += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                      if f.endswith(".md"))
+    return [p for p in out if os.path.exists(p)]
+
+
+def check_links(root: str):
+    problems = []
+    for path in md_files(root):
+        with open(path) as f:
+            text = f.read()
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                problems.append(
+                    f"{os.path.relpath(path, root)}: broken link -> "
+                    f"{target}")
+    return problems
+
+
+def serve_flags(root: str):
+    src = os.path.join(root, "src", "repro", "launch", "serve.py")
+    with open(src) as f:
+        return set(FLAG_RE.findall(f.read()))
+
+
+def readme_flag_table(root: str):
+    """Flags the README documents: `--flag` occurrences in table rows
+    (lines starting with '|')."""
+    flags = set()
+    with open(os.path.join(root, "README.md")) as f:
+        for line in f:
+            if line.lstrip().startswith("|"):
+                flags.update(MD_FLAG_RE.findall(line))
+    return flags
+
+
+def check_flags(root: str):
+    problems = []
+    in_serve = serve_flags(root)
+    if not in_serve:
+        return ["could not parse any argparse flags out of serve.py"]
+    in_readme = readme_flag_table(root)
+    for flag in sorted(in_serve - in_readme):
+        problems.append(
+            f"README.md: serve.py flag {flag} missing from the flag table")
+    for flag in sorted(in_readme - in_serve):
+        problems.append(
+            f"README.md: flag table documents {flag}, which serve.py "
+            "does not define")
+    return problems
+
+
+def main(root: str) -> int:
+    problems = check_links(root) + check_flags(root)
+    for p in problems:
+        print(f"check_docs: {p}", file=sys.stderr)
+    if problems:
+        print(f"check_docs: {len(problems)} problem(s)", file=sys.stderr)
+        return 1
+    n_md = len(md_files(root))
+    print(f"check_docs: OK ({n_md} markdown files, "
+          f"{len(serve_flags(root))} serve.py flags in sync)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else
+                  os.path.dirname(os.path.dirname(
+                      os.path.abspath(__file__)))))
