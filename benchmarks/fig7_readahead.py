@@ -31,7 +31,8 @@ the committed experiments/fig6_paging.csv row bit-for-bit — and FAILS
 
 Emits experiments/fig7_readahead.csv and BENCH_fig7.json; ``--smoke``
 runs a shortened request stream for the CI benchmark-smoke job (the
-degenerate fig6 replay is skipped there — tier-1 tests pin it).
+degenerate fig6 replay still runs there, so drift fails the job; tier-1
+tests pin it too).
 """
 from __future__ import annotations
 
@@ -210,11 +211,11 @@ def main(out_csv: str = "experiments/fig7_readahead.csv",
           f"{paged['hit_rate_dram']:.0%}); remainder hits "
           f"{rem['remainder_hit_rate']:.0%} of requests")
 
-    drift = None
-    if not smoke:
-        drift = check_degenerate_fig6(runner)
-        print(f"degenerate check: knobs-off fig6 'paged' replay matches "
-              f"the committed artifact (max drift {drift:.2e})")
+    # runs in --smoke too: the CI benchmark-smoke job must FAIL when a
+    # knobs-off engine drifts from the committed artifact
+    drift = check_degenerate_fig6(runner)
+    print(f"degenerate check: knobs-off fig6 'paged' replay matches "
+          f"the committed artifact (max drift {drift:.2e})")
 
     if os.path.dirname(out_csv):
         os.makedirs(os.path.dirname(out_csv), exist_ok=True)

@@ -1,0 +1,240 @@
+"""Per-page lossy compression benchmark: the joint knapsack frontier.
+
+Runs fig7's skewed prefix-sharing workload (doc 0's variants take 3/4
+of requests; contexts are 3 pages of 64 + a 48-token tail) on a DRAM
+tier sized so the UNCOMPRESSED page set cannot fit (~1 average entry),
+and sweeps the per-page compression axis:
+
+  static_none    FixedPolicy ("none", 1.0): lossless pages, heavy SSD
+                 spill — the quality ceiling at the TTFT floor's cost
+  static_kivi8   FixedPolicy ("kivi", 0.28): every page 8-bit KIVI —
+                 one uniform rate for hot prefixes and cold tails alike
+  static_kivi4   FixedPolicy ("kivi", 0.16): every page 4-bit KIVI —
+                 everything fits DRAM, everything pays the quality cost
+  adaptive_*     AdaptivePolicy with run-aware page utility (PR 6): the
+                 joint compression/eviction knapsack keeps hot-prefix
+                 pages lossless in DRAM and walks cold/deep pages down
+                 the rate ladder (eviction = the ladder's limit point),
+                 swept over alpha (quality weight)
+
+Each request's answer quality is priced through the SAME composed
+estimator (``QualityEstimator.compose`` over the served page run,
+token-weighted geometric mean), so the TTFT/quality frontier is
+apples-to-apples across policies. The self-check asserts per-page
+adaptive STRICTLY DOMINATES at least one static-rate baseline: lower
+mean TTFT at equal-or-better composed quality.
+
+Degenerate replays (knobs off -> FixedPolicy lossless) of the
+committed fig6 "paged" and fig7 "paged" rows must match bit-for-bit —
+they run in ``--smoke`` too, so the CI benchmark-smoke job FAILS when
+either drifts.
+
+    PYTHONPATH=src python benchmarks/fig8_evicpress.py [--smoke]
+
+Emits experiments/fig8_evicpress.csv and BENCH_fig8.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import fig7_readahead as f7  # noqa: E402
+from artifacts import load_committed_row  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.estimator import QualityEstimator  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.serving.baselines import build_engine  # noqa: E402
+from repro.serving.engine import summarize  # noqa: E402
+from repro.serving.runner import ModelRunner  # noqa: E402
+from repro.serving.workload import make_prefix_sharing_contexts  # noqa: E402
+
+ARCH = "adaptcache-8b"
+N_ACTIVE = 8_030_000_000
+
+PAGE = f7.PAGE
+CHUNK = f7.CHUNK
+GAP_S = f7.GAP_S
+LANES = f7.LANES
+DRAM_ENTRIES = 1.0          # the uncompressed page set does NOT fit
+SSD_ENTRIES = 50.0
+
+# label -> (policy spec, alpha) ; alpha is ignored by FixedPolicy
+STATIC_MODES = [
+    ("static_none", ("none", 1.0)),
+    ("static_kivi8", ("kivi", 0.28)),
+    ("static_kivi4", ("kivi", 0.16)),
+]
+ADAPTIVE_ALPHAS = [0.003, 0.01, 0.03]
+DEPTH_DISCOUNT = 0.85
+
+CSV_KEYS = ["ttft_mean_s", "ttft_p50_s", "ttft_p90_s", "ttft_p99_s",
+            "composed_quality_mean", "hit_rate", "hit_rate_dram",
+            "hit_rate_ssd", "pages_hit_mean", "tokens_reused_frac_mean",
+            "partial_hit_rate", "queue_mean_s", "load_mean_s",
+            "prefill_mean_s"]
+
+
+def make_quality_estimator() -> QualityEstimator:
+    """Synthetic per-(task, method) quality-rate curves (the offline
+    profiling artifact, pinned so the benchmark is deterministic):
+    coding degrades fastest under quantization, summarization is the
+    most redundant.  streaming_llm/drop_kivi fall back to the kivi
+    curve inside ``predict``."""
+    qe = QualityEstimator()
+    curves = {
+        "qa": [(0.09, 0.55), (0.16, 0.80), (0.28, 0.95), (1.0, 1.0)],
+        "summarization": [(0.09, 0.62), (0.16, 0.85), (0.28, 0.96),
+                          (1.0, 1.0)],
+        "coding": [(0.09, 0.45), (0.16, 0.72), (0.28, 0.92), (1.0, 1.0)],
+    }
+    for task, curve in curves.items():
+        qe.set_curve(task, "kivi", curve)
+    return qe
+
+
+def run_mode(runner, contexts, full, prefills, requests, *, policy,
+             alpha, label, qe, skip_quality=False):
+    rig = build_engine(runner, contexts, full, N_ACTIVE, policy=policy,
+                      alpha=alpha, quality_est=qe,
+                      dram_entries=DRAM_ENTRIES, ssd_entries=SSD_ENTRIES,
+                      n_lanes=LANES,
+                      ssd_root=tempfile.mkdtemp(prefix=f"f8_{label}_"),
+                      page_tokens=PAGE, chunk_tokens=CHUNK,
+                      depth_discount=DEPTH_DISCOUNT)
+    for c in contexts:
+        rig.engine.paged.insert_context(c.tokens, prefills[c.key],
+                                        c.task_type, now=0.0)
+    res = rig.engine.process(requests, skip_quality=skip_quality)
+    s = summarize(res)
+    return s, rig
+
+
+def check_degenerate_fig7(runner) -> float:
+    """Replay fig7's committed 'paged' mode (FixedPolicy lossless, both
+    page-native knobs off — exactly the state PR 6's knobs must leave
+    untouched when disabled) and compare against the committed artifact
+    row.  A missing artifact is a FAILURE, never a silent skip."""
+    ref = load_committed_row("experiments/fig7_readahead.csv", "paged",
+                             "benchmarks/fig7_readahead.py")
+    cfg = get_config(ARCH, smoke=True)
+    rng = np.random.RandomState(23)
+    contexts = make_prefix_sharing_contexts(
+        rng, cfg.vocab_size, n_docs=3, n_variants=3,
+        prefix_len=f7.PREFIX, suffix_len=f7.SUFFIX, n_probes=2)
+    requests = f7.skewed_requests(contexts, 36, f7.GAP_S, max_new=6)
+    prefills = {c.key: runner.prefill_entry(c.tokens) for c in contexts}
+    s, _, _ = f7.run_mode(runner, contexts, get_config(ARCH), prefills,
+                          requests, readahead=0, remainder=False,
+                          label="degen", skip_quality=True)
+    drift = max(abs(s[k] - ref[k]) for k in f7.CSV_KEYS)
+    assert drift <= 1.5e-6, \
+        f"knobs-off engine drifted from committed fig7 paged row: {drift}"
+    return drift
+
+
+def main(out_csv: str = "experiments/fig8_evicpress.csv",
+         out_json: str = "BENCH_fig8.json", smoke: bool = False):
+    cfg = get_config(ARCH, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    runner = ModelRunner(model, params, capacity=256)
+
+    rng = np.random.RandomState(23)
+    contexts = make_prefix_sharing_contexts(
+        rng, cfg.vocab_size, n_docs=3, n_variants=3,
+        prefix_len=f7.PREFIX, suffix_len=f7.SUFFIX, n_probes=2)
+    n_req = 24 if smoke else 36
+    requests = f7.skewed_requests(contexts, n_req, GAP_S, max_new=6)
+    full = get_config(ARCH)
+    prefills = {c.key: runner.prefill_entry(c.tokens) for c in contexts}
+    qe = make_quality_estimator()
+
+    modes = ([(label, spec, 0.01) for label, spec in STATIC_MODES]
+             + [(f"adaptive_a{a:g}", "adaptive", a)
+                for a in ADAPTIVE_ALPHAS])
+    rows, stats = [], {}
+    for label, spec, alpha in modes:
+        s, _ = run_mode(runner, contexts, full, prefills, requests,
+                        policy=spec, alpha=alpha, label=label, qe=qe,
+                        skip_quality=smoke)
+        stats[label] = s
+        rows.append((label, s))
+        print(f"{label:16s} ttft_mean={s['ttft_mean_s']*1e3:7.1f}ms "
+              f"p90={s['ttft_p90_s']*1e3:7.1f}ms "
+              f"composed_q={s['composed_quality_mean']:.4f} "
+              f"dram={s['hit_rate_dram']:.2f} ssd={s['hit_rate_ssd']:.2f}")
+
+    # the acceptance headline: SOME adaptive point strictly dominates
+    # SOME static-rate baseline — lower mean TTFT at equal-or-better
+    # composed quality (a uniform rate must price hot prefixes and cold
+    # tails identically; the per-page knapsack does not have to)
+    adaptive_labels = [m[0] for m in modes if m[1] == "adaptive"]
+    static_labels = [m[0] for m in modes if m[1] != "adaptive"]
+    dominations = [
+        (a, b) for a in adaptive_labels for b in static_labels
+        if (stats[a]["ttft_mean_s"] < stats[b]["ttft_mean_s"]
+            and stats[a]["composed_quality_mean"]
+            >= stats[b]["composed_quality_mean"])]
+    assert dominations, (
+        "no per-page adaptive point dominates any static-rate baseline: "
+        + "; ".join(f"{label}: ttft={stats[label]['ttft_mean_s']*1e3:.1f}ms"
+                    f" q={stats[label]['composed_quality_mean']:.4f}"
+                    for label in stats))
+    a0, b0 = dominations[0]
+    print(f"\nper-page adaptive dominates: {a0} "
+          f"(ttft {stats[a0]['ttft_mean_s']*1e3:.1f}ms, "
+          f"q {stats[a0]['composed_quality_mean']:.4f}) vs {b0} "
+          f"(ttft {stats[b0]['ttft_mean_s']*1e3:.1f}ms, "
+          f"q {stats[b0]['composed_quality_mean']:.4f})")
+
+    # degenerate bit-for-bit replays run in --smoke too: the CI
+    # benchmark-smoke job must FAIL when a knobs-off engine drifts from
+    # either committed artifact
+    drift6 = f7.check_degenerate_fig6(runner)
+    print(f"degenerate check: knobs-off fig6 'paged' replay matches "
+          f"(max drift {drift6:.2e})")
+    drift7 = check_degenerate_fig7(runner)
+    print(f"degenerate check: knobs-off fig7 'paged' replay matches "
+          f"(max drift {drift7:.2e})")
+
+    if os.path.dirname(out_csv):
+        os.makedirs(os.path.dirname(out_csv), exist_ok=True)
+    with open(out_csv, "w") as f:
+        f.write("mode," + ",".join(CSV_KEYS) + "\n")
+        for label, s in rows:
+            f.write(label + "," + ",".join(f"{s[k]:.6f}" for k in CSV_KEYS)
+                    + "\n")
+    with open(out_json, "w") as f:
+        json.dump({"benchmark": "fig8_evicpress", "smoke": smoke,
+                   "n_requests": n_req, "page_tokens": PAGE,
+                   "dram_entries": DRAM_ENTRIES,
+                   "adaptive_alphas": ADAPTIVE_ALPHAS,
+                   "depth_discount": DEPTH_DISCOUNT,
+                   "modes": {label: {k: s[k] for k in CSV_KEYS}
+                             for label, s in rows},
+                   "dominations": dominations,
+                   "degenerate_fig6_drift": drift6,
+                   "degenerate_fig7_drift": drift7},
+                  f, indent=2)
+    print(f"wrote {out_csv} and {out_json}")
+    return stats
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shortened stream for the CI benchmark-smoke job"
+                         " (degenerate replays still run and still fail "
+                         "on drift)")
+    ap.add_argument("--out-csv", default="experiments/fig8_evicpress.csv")
+    ap.add_argument("--out-json", default="BENCH_fig8.json")
+    args = ap.parse_args()
+    main(out_csv=args.out_csv, out_json=args.out_json, smoke=args.smoke)

@@ -11,6 +11,8 @@
                                prefix-affinity on a prefix-sharing workload
   fig7_readahead      —      — page-level sequential readahead + remainder
                                caching vs the PR-4 paged path
+  fig8_evicpress      —      — per-page lossy compression knapsack vs
+                               static-rate baselines (TTFT/quality frontier)
   tab_alpha_hitrate   §3     — DRAM hit rate vs alpha sweep
   estimator_curves    §2     — offline quality-rate profiling
   kernel_bench        —      — Pallas-op microbenches (CSV contract)
@@ -35,7 +37,7 @@ def main() -> None:
     from benchmarks import (estimator_curves, fig1_hitrate,
                             fig2_ttft_quality, fig3_overlap, fig4_prefetch,
                             fig5_topology, fig6_paging, fig7_readahead,
-                            kernel_bench, roofline_bench,
+                            fig8_evicpress, kernel_bench, roofline_bench,
                             tab_alpha_hitrate)
     suites = [
         ("kernel_bench", kernel_bench.main),
@@ -51,6 +53,7 @@ def main() -> None:
             ("fig5_topology", fig5_topology.main),
             ("fig6_paging", fig6_paging.main),
             ("fig7_readahead", fig7_readahead.main),
+            ("fig8_evicpress", fig8_evicpress.main),
             ("tab_alpha_hitrate", tab_alpha_hitrate.main),
         ]
     for name, fn in suites:

@@ -153,6 +153,16 @@ class AdaptCacheController:
         self.run_freq = RunFrequencyEstimator()
         self.page_runs: Dict[str, List[str]] = {}
         self.max_page_runs = 512
+        # reverse map page/remainder key -> run key, maintained alongside
+        # page_runs: the policy's run-aware utility looks a page's run up
+        # here (pruned together with the capped registry)
+        self.run_of: Dict[str, str] = {}
+        if isinstance(policy, AdaptivePolicy):
+            policy.bind_run_signals(self.run_freq, self.run_of.get)
+        # optional quality estimator for request-level composed quality
+        # (PagedPrefixCache.match_prefix prices each matched piece with
+        # it); serving rigs wire the same estimator the policy uses
+        self.quality_est: Optional[QualityEstimator] = None
         self.counters = {"hits": 0, "misses": 0, "inserts": 0,
                          "prefetches": 0, "hit_remote": 0,
                          "page_runs": 0, "page_run_hits": 0,
@@ -233,24 +243,31 @@ class AdaptCacheController:
                       run_key: Optional[str] = None,
                       keys: Optional[List[str]] = None,
                       now: Optional[float] = None,
-                      rem_hit: bool = False) -> None:
+                      rem_hit: bool = False,
+                      rem_key: Optional[str] = None) -> None:
         """Record one page-granular prefix match (``PagedPrefixCache``):
-        under paging, ``hits``/``misses`` count individual page fetches,
-        so run-level counters keep request-granular stats visible —
-        full/partial/miss runs plus the total pages reused. A run that
-        matched nothing is the paged analogue of a whole-entry miss and
-        counts one ``miss`` — unless a remainder entry served the
-        request (``rem_hit``), which counts as a FULL run even when the
-        chain is empty (a sub-page context served entirely from its
-        remainder). When ``run_key`` is given the run-level frequency
-        EWMA is updated and ``keys`` (the requesting context's full page
-        chain) is remembered as the run's latest trajectory — the chain
-        sequential readahead will walk (``run_candidates``); a diverging
-        variant simply overwrites it."""
+        under paging, ``hits``/``misses`` count individual page fetches
+        — matched pages count hits (in ``fetch``), and every unmatched
+        page beyond the run break counts a miss HERE, so ``hit_rate``'s
+        denominator is the fixed per-request page count rather than
+        whichever pages happened to match. A run that matched nothing in
+        a sub-page context (no pages to count) still counts one miss —
+        unless a remainder entry served the request (``rem_hit``), which
+        counts as a FULL run even when the chain is empty. Run-level
+        counters keep the request-granular view (full/partial/miss runs
+        plus the total pages reused). When ``run_key`` is given the
+        run-level frequency EWMA is updated and ``keys`` (the requesting
+        context's full page chain, plus ``rem_key`` when the context has
+        a stored remainder) is remembered as the run's latest trajectory
+        — the chain sequential readahead will walk (``run_candidates``)
+        and the reverse ``run_of`` map the policy's run-aware utility
+        reads; a diverging variant simply overwrites it."""
         self.counters["page_runs"] += 1
         self.counters["page_run_hits"] += n_hit
+        self.counters["misses"] += max(0, n_pages - n_hit)
         if n_hit == 0 and not rem_hit:
-            self.counters["misses"] += 1
+            if n_pages == 0:
+                self.counters["misses"] += 1   # sub-page context, no tail
             self.counters["page_runs_miss"] += 1
         elif n_hit < n_pages:
             self.counters["page_runs_partial"] += 1
@@ -261,12 +278,18 @@ class AdaptCacheController:
             self.run_freq.note_run(run_key, now)
             if keys is not None:
                 self.page_runs[run_key] = list(keys)
+                for k in keys:
+                    self.run_of[k] = run_key
+                if rem_key is not None:
+                    self.run_of[rem_key] = run_key
                 if len(self.page_runs) > self.max_page_runs:
                     coldest = min(
                         self.page_runs,
                         key=lambda rk: (self.run_freq.predict(rk, now), rk))
                     self.page_runs.pop(coldest)
                     self.run_freq.forget(coldest)
+                    self.run_of = {k: rk for k, rk in self.run_of.items()
+                                   if rk != coldest}
 
     # -- speculative prefetch ---------------------------------------------------
     def prefetch_candidates(self, now: Optional[float] = None,
@@ -315,8 +338,14 @@ class AdaptCacheController:
         pass the promoting replica's own DRAM).
 
         Declines (returns None) unless the entry fits in free fast-tier
-        space plus space held by strictly-colder residents — a prefetch
-        must never evict an entry hotter than the one being promoted.
+        space plus space the active policy would actually free from
+        strictly-colder residents — a prefetch must never evict an entry
+        hotter than the one being promoted. The would-be victims are
+        derived from ``policy.pick_move`` itself (the same selector the
+        subsequent ``_enforce`` runs), not from an independent frequency
+        ranking: under ``FixedPolicy`` enforcement is pure LRU, and a
+        guard that scanned coldest-by-EWMA first could approve a
+        promotion whose real LRU victim is hotter than the promotee.
         """
         now = self.clock() if now is None else now
         fast = self.tier_order[0] if dst_tier is None else dst_tier
@@ -332,14 +361,25 @@ class AdaptCacheController:
         if need > 0:
             mine = self.freq.predict(key, now)
             freed = 0
-            for m in sorted(self._entries_in(fast),
-                            key=lambda m: (self.freq.predict(m.key, now),
-                                           m.key)):
-                if self.freq.predict(m.key, now) >= mine:
-                    return None     # would displace an at-least-as-hot entry
-                freed += m.nbytes
-                if freed >= need:
+            candidates = self._entries_in(fast)
+            while freed < need and candidates:
+                move = self.policy.pick_move(
+                    fast, candidates, now,
+                    kv_lookup=self.executor.proxies.get)
+                if move is None:
                     break
+                victim = self.meta[move.key]
+                if (move.kind != "recompress"
+                        and self.freq.predict(victim.key, now) >= mine):
+                    return None  # would displace an at-least-as-hot entry
+                # a recompression keeps the entry resident (no
+                # displacement to veto); either way count the bytes the
+                # move frees and drop the entry from the hypothetical
+                # tier state — conservative for repeated recompression
+                # (under-counts freeable bytes, never over-approves)
+                freed += (move.bytes_freed if move.kind == "recompress"
+                          else victim.nbytes)
+                candidates = [m for m in candidates if m.key != move.key]
             if freed < need:
                 return None
         src = meta.tier

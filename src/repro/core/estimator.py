@@ -110,6 +110,33 @@ class QualityEstimator:
                   curve: Sequence[Tuple[float, float]]) -> None:
         self.curves[(task_type, method)] = sorted(curve)
 
+    @staticmethod
+    def compose(qualities: Sequence[float],
+                weights: Optional[Sequence[float]] = None) -> float:
+        """Compose per-piece qualities along a matched page run into one
+        request-level score: the token-weighted GEOMETRIC mean (CacheGen's
+        per-piece rate choices multiply along the context — losing half
+        the signal in ANY page hurts the whole answer, so the composition
+        must punish a weak link harder than an arithmetic mean would).
+
+        Properties the policy relies on (tested via hypothesis):
+        ``compose([q]*n) == q`` (uniform runs keep the per-page score),
+        monotone non-DEcreasing in every piece, and 0 the moment any
+        weighted piece is 0. Empty runs compose to 1.0 (nothing was
+        approximated)."""
+        qs = np.asarray(list(qualities), dtype=np.float64)
+        if qs.size == 0:
+            return 1.0
+        w = (np.ones_like(qs) if weights is None
+             else np.asarray(list(weights), dtype=np.float64))
+        tot = w.sum()
+        if tot <= 0:
+            return 1.0
+        w = w / tot
+        if np.any((qs <= 0.0) & (w > 0)):
+            return 0.0
+        return float(np.exp(np.sum(w * np.log(np.clip(qs, 1e-12, 1.0)))))
+
     def predict(self, task_type: str, method: str, rate: float,
                 redundancy: float = 0.5) -> float:
         if method == "none":

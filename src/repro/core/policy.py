@@ -131,7 +131,8 @@ class AdaptivePolicy(BasePolicy):
                  tiers: Dict[str, Tier], tier_order: Sequence[str],
                  quality: QualityEstimator, freq: FrequencyEstimator,
                  delay_profile: DelayProfile, alpha: float = 1.0,
-                 topology: Optional[StorageTopology] = None):
+                 topology: Optional[StorageTopology] = None,
+                 depth_discount: float = 0.85):
         self.methods = methods
         self.tiers = tiers
         self.tier_order = list(tier_order)      # fast -> slow
@@ -140,6 +141,34 @@ class AdaptivePolicy(BasePolicy):
         self.delay = delay_profile
         self.alpha = alpha
         self.topology = topology
+        # run-aware page frequency (bound by the controller): a page's
+        # future hits come from its RUN's traffic, discounted by depth —
+        # page i of a run only serves requests whose match reaches it
+        self.depth_discount = depth_discount
+        self.run_freq: Optional[FrequencyEstimator] = None
+        self.run_lookup = None                  # page/rem key -> run key
+
+    def bind_run_signals(self, run_freq: FrequencyEstimator,
+                         run_lookup) -> None:
+        """Wire the controller's run-level EWMA + page->run map so
+        ``utility`` can rank ``pg-*``/``rem-*`` entries by their run's
+        traffic instead of the per-entry estimate (which is blind to the
+        prefix sharing that makes early pages hot)."""
+        self.run_freq = run_freq
+        self.run_lookup = run_lookup
+
+    def _entry_freq(self, key: str, now: float) -> float:
+        """Predicted hit rate: run-aware for page/remainder entries
+        whose run is known (run EWMA x depth_discount^depth — hot-prefix
+        pages out-rank deep-tail pages at equal recency), the per-entry
+        EWMA otherwise."""
+        if self.run_freq is not None and key.startswith(("pg-", "rem-")):
+            run_key = self.run_lookup(key) if self.run_lookup else None
+            if run_key is not None and self.run_freq.seen(run_key):
+                depth = max(0, _page_depth(key))
+                return (self.run_freq.predict(run_key, now)
+                        * self.depth_discount ** depth)
+        return self.freq.predict(key, now)
 
     # -- utility ------------------------------------------------------------
     def _delay_term(self, tier_name: str, method: str, nbytes: int,
@@ -158,7 +187,7 @@ class AdaptivePolicy(BasePolicy):
 
     def utility(self, meta: EntryMeta, tier_name: str, method: str,
                 rate: float, nbytes: int, now: float) -> float:
-        f = self.freq.predict(meta.key, now)
+        f = self._entry_freq(meta.key, now)
         q = self.quality.predict(meta.task_type, method, rate, meta.redundancy)
         return f * (self.alpha * q
                     - self._delay_term(tier_name, method, nbytes,
@@ -236,12 +265,17 @@ class AdaptivePolicy(BasePolicy):
                                 meta.rate, meta.nbytes, drop,
                                 dst_tier=next_tier)
 
-            # (c) evict (last tier only)
-            if next_tier is None:
-                drop = max(u_cur, 0.0) / meta.nbytes
-                if best is None or drop < best.drop_per_byte:
-                    best = Move(meta.key, "evict", tier_name, meta.method,
-                                meta.rate, meta.nbytes, drop)
+            # (c) evict — the LIMIT POINT of the compression ladder
+            # (EVICPRESS): rate -> 0 keeps zero utility, so eviction is
+            # just the final rung, scored on the SAME drop-per-byte
+            # scale as recompress/demote on EVERY tier. A
+            # negative-utility entry (delay term exceeds alpha*quality)
+            # has negative drop: removing it is a strict improvement and
+            # the greedy takes it before touching anything useful.
+            drop = u_cur / meta.nbytes
+            if best is None or drop < best.drop_per_byte:
+                best = Move(meta.key, "evict", tier_name, meta.method,
+                            meta.rate, meta.nbytes, drop)
         return best
 
 

@@ -75,6 +75,11 @@ def main(argv=None) -> int:
                     help="adaptive | prefill | none | kivi:<rate> | "
                          "streaming_llm:<rate>")
     ap.add_argument("--alpha", type=float, default=0.01)
+    ap.add_argument("--depth-discount", type=float, default=0.85,
+                    help="run-aware page utility: per-page-depth discount "
+                         "on the run's predicted hit rate (adaptive "
+                         "policy, paged mode) — hot-prefix pages out-rank "
+                         "deep-tail pages at equal recency")
     ap.add_argument("--rate", type=float, default=0.5, help="req/s")
     ap.add_argument("--duration", type=float, default=90.0)
     ap.add_argument("--contexts-per-task", type=int, default=4)
@@ -172,7 +177,8 @@ def main(argv=None) -> int:
                        chunk_tokens=args.chunk_tokens,
                        affinity=args.affinity,
                        readahead_pages=args.readahead_pages,
-                       remainder_cache=args.remainder_cache)
+                       remainder_cache=args.remainder_cache,
+                       depth_discount=args.depth_discount)
     if args.fit_estimator and args.policy == "adaptive":
         fit_quality_estimator(rig, contexts)
         print("quality estimator fitted")

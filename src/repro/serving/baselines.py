@@ -60,7 +60,8 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
                  chunk_tokens: int = 0,
                  affinity: bool = False,
                  readahead_pages: int = 0,
-                 remainder_cache: bool = False) -> EngineRig:
+                 remainder_cache: bool = False,
+                 depth_discount: float = 0.85) -> EngineRig:
     methods = default_registry()
     smoke_cfg = runner.model.cfg
     if topology is None:
@@ -97,7 +98,8 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
 
     if policy == "adaptive":
         pol = AdaptivePolicy(methods, tiers, order, qe, freq, delay,
-                             alpha=alpha, topology=topology)
+                             alpha=alpha, topology=topology,
+                             depth_discount=depth_discount)
     elif policy == "prefill":
         # zero-capacity tiers: every request misses -> recompute
         tiers = {name: DRAMTier(DeviceSpec("dram", 0, 16e9, 16e9),
@@ -113,6 +115,11 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
     clock = SimClock()
     ctrl = AdaptCacheController(methods, tiers, order, pol, delay, freq,
                                 clock=clock, topology=topology)
+    # composed-quality pricing: match_prefix scores each served piece
+    # through the same estimator the adaptive policy optimizes with, so
+    # FetchPlan.quality / RequestResult.composed_quality are consistent
+    # across adaptive and fixed-rate baselines
+    ctrl.quality_est = qe
     tm = TimeModel(full_cfg, device, n_active_params)
     eng = ServingEngine(runner, ctrl, tm, contexts, n_replicas=n_replicas,
                         n_lanes=n_lanes, sim_clock=clock,

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core.compression.base import KVData
 from repro.core.controller import AdaptCacheController, FetchResult, Transfer
+from repro.core.estimator import QualityEstimator
 
 PAGE_TOKENS = 256
 TOKEN_ARRAYS = ("k", "v", "ckv", "krope", "positions")
@@ -175,6 +176,11 @@ class FetchPlan:
     kv: Optional[KVData]            # joined matched pages (decompressed)
     remainder_tokens: int = 0       # sub-page tail covered by a matched
     #                                 remainder entry (0: none matched)
+    quality: float = 1.0            # composed run quality: per-piece
+    #                                 estimates (QualityEstimator) folded
+    #                                 by the token-weighted geometric
+    #                                 mean — one lossy page taxes the
+    #                                 whole request's answer
 
     @property
     def n_pages(self) -> int:
@@ -297,6 +303,8 @@ class PagedPrefixCache:
         invalidates it. The caller books the piece reads on the owning
         tiers' I/O channels."""
         keys = page_keys(tokens, self.page_tokens) if keys is None else keys
+        rkey = (remainder_key(tokens, self.page_tokens)
+                if self.remainder else None)
         fetched: List[Tuple[str, FetchResult]] = []
         for key in keys:
             if self.controller.lookup(key) is None:
@@ -307,7 +315,6 @@ class PagedPrefixCache:
             fetched.append((key, r))
         rem_tokens = 0
         if self.remainder and len(fetched) == len(keys):
-            rkey = remainder_key(tokens, self.page_tokens)
             if rkey is not None and self.controller.lookup(rkey) is not None:
                 r = self.controller.fetch(rkey, now=now, replica=replica)
                 if r is not None:
@@ -317,7 +324,7 @@ class PagedPrefixCache:
         self.controller.note_page_run(
             len(fetched) - (1 if rem_tokens else 0), len(keys),
             run_key=keys[0] if keys else None, keys=keys, now=now,
-            rem_hit=rem_tokens > 0)
+            rem_hit=rem_tokens > 0, rem_key=rkey)
         if not fetched:
             return FetchPlan([], 0, 0, None)
         kv = join_kv([f.kv for _, f in fetched])
@@ -329,7 +336,37 @@ class PagedPrefixCache:
                  for key, f in fetched]
         n_page_hits = len(fetched) - (1 if rem_tokens else 0)
         return FetchPlan(pages, n_page_hits * self.page_tokens + rem_tokens,
-                         n_tokens, kv, remainder_tokens=rem_tokens)
+                         n_tokens, kv, remainder_tokens=rem_tokens,
+                         quality=self._compose_quality(fetched, rem_tokens))
+
+    def _compose_quality(self, fetched: List[Tuple[str, FetchResult]],
+                         rem_tokens: int) -> float:
+        """Composed quality of the matched run: each piece's
+        (method, rate) priced through the quality estimator — the one
+        the policy optimizes with, falling back to the controller's
+        serving-rig estimator — and folded by the token-weighted
+        geometric mean (``QualityEstimator.compose``). Without any
+        estimator, lossless pieces score 1.0 and the composition is
+        degenerate-exact (all-\"none\" runs always compose to 1.0)."""
+        if not fetched:
+            return 1.0
+        qe = (self.controller.quality_est
+              or getattr(self.controller.policy, "quality", None))
+        quals, weights = [], []
+        for i, (key, f) in enumerate(fetched):
+            meta = self.controller.meta.get(key)
+            if f.method == "none":
+                q = 1.0
+            elif qe is not None:
+                q = qe.predict(meta.task_type if meta else "qa",
+                               f.method, f.rate,
+                               meta.redundancy if meta else 0.5)
+            else:
+                q = 1.0
+            quals.append(q)
+            is_rem = rem_tokens > 0 and i == len(fetched) - 1
+            weights.append(rem_tokens if is_rem else self.page_tokens)
+        return QualityEstimator.compose(quals, weights)
 
     def local_run(self, tokens: np.ndarray, dram_tier: str,
                   keys: Optional[List[str]] = None) -> int:

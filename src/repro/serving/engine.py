@@ -178,6 +178,11 @@ class RequestResult:
     #                                  1 - (suffix re-prefilled / context)
     remainder_hit: bool = False      # full run + remainder entry matched:
     #                                  the exact repeat recomputed nothing
+    composed_quality: float = 1.0    # estimator-side quality of the served
+    #                                  KV: per-piece (method, rate) scores
+    #                                  composed along the matched run
+    #                                  (QualityEstimator.compose); 1.0 for
+    #                                  misses (recompute is exact)
 
 
 @dataclasses.dataclass
@@ -318,7 +323,7 @@ class ServingEngine:
         self.readahead_pages = readahead_pages
         self.remainder_cache = remainder_cache
         self.readahead_stats = {"issued": 0, "hits": 0, "wasted": 0,
-                                "cancelled": 0}
+                                "cancelled": 0, "piggybacked": 0}
         # chunked prefill: suffix prefill splits into chunk_tokens-token
         # chunks on ONE unified compute channel per replica that decode
         # ticks also book (0 = dedicated prefill stream, legacy timing)
@@ -331,6 +336,19 @@ class ServingEngine:
         self._ref_cache: Dict[str, List[int]] = {}
         self._prefill_cache: Dict[str, Any] = {}
         self.last_trace: List[Tuple[float, str, Dict[str, Any]]] = []
+
+    def _entry_quality(self, key: str, method: str, rate: float) -> float:
+        """Estimator-side quality of one served whole entry — the
+        single-piece degenerate of the composed run quality."""
+        if method == "none":
+            return 1.0
+        qe = (self.controller.quality_est
+              or getattr(self.controller.policy, "quality", None))
+        if qe is None:
+            return 1.0
+        meta = self.controller.meta.get(key)
+        return qe.predict(meta.task_type if meta else "qa", method, rate,
+                          meta.redundancy if meta else 0.5)
 
     # -- reference answers (uncompressed prefill), cached -----------------------
     def _probe_key(self, ctx_key: str, question: np.ndarray,
@@ -374,7 +392,7 @@ class ServingEngine:
         self.prefetch_stats = {"issued": 0, "hits": 0, "wasted": 0,
                                "suppressed": 0}
         self.readahead_stats = {"issued": 0, "hits": 0, "wasted": 0,
-                                "cancelled": 0}
+                                "cancelled": 0, "piggybacked": 0}
         self.chunk_stats = {"chunks_issued": 0, "queue_s": 0.0,
                             "ticks_delayed": 0, "tick_delay_s": 0.0}
         # per-tier channels: duplex tiers get independent read/write
@@ -529,16 +547,24 @@ class ServingEngine:
             return False
 
         def readahead_run(now: float, rep: _Replica, run_key: str,
-                          chain: List[str], idle_only: bool) -> None:
+                          chain: List[str], idle_only: bool,
+                          served: Optional[Dict[str, float]] = None
+                          ) -> None:
             """Walk ``chain`` in page order and promote its slow-tier
             residents into the acting replica's DRAM (sequential
             readahead), up to ``readahead_pages`` promotions in flight
             engine-wide. ``idle_only`` (the hot-run background walk)
             skips pages whose source channel is busy serving; the
             dispatch-time walk queues BEHIND the serving reads it just
-            booked. The controller's displacement guard arbitrates every
-            move, and wasted/cancelled promotions cool the key down like
-            entry prefetch."""
+            booked — and a promotion of a page the current serving plan
+            is ALREADY reading (``served``: page key -> read completion)
+            piggybacks on that in-flight read instead of re-booking the
+            slow channel: the bytes are coming off the SSD anyway, so
+            the promotion pays only the DRAM write (counted in
+            ``readahead_stats['piggybacked']``). The controller's
+            displacement guard arbitrates every move, and
+            wasted/cancelled promotions cool the key down like entry
+            prefetch."""
             for key in chain:
                 if ra_count[0] >= self.readahead_pages:
                     return
@@ -562,7 +588,24 @@ class ServingEngine:
                 self.readahead_stats["issued"] += 1
                 note(now, "readahead_issue", key=key, run=run_key,
                      src=tr.src_tier, dst=tr.dst_tier, nbytes=tr.nbytes)
-                book(now, transfers, "readahead")
+                if served is not None and key in served:
+                    # piggyback: the DRAM write starts once the serving
+                    # read has the bytes; any enforce-induced transfers
+                    # the promotion triggered still book normally
+                    t0 = max(now, served[key])
+                    _, done = wchannels[tr.dst_tier].book_service(
+                        t0, self.controller.tiers[tr.dst_tier].store_delay(
+                            tr.nbytes))
+                    ready_at[tr.key] = max(ready_at.get(tr.key, 0.0), done)
+                    self.readahead_stats["piggybacked"] += 1
+                    note(now, "readahead_piggyback", key=key, run=run_key,
+                         dst=tr.dst_tier, nbytes=tr.nbytes, done=done)
+                    loop.push(done, EV_WRITE_DONE, (dataclasses.replace(
+                        tr, src_tier=None, read_nbytes=0), "readahead"))
+                    book(now, [t for t in transfers if t is not tr],
+                         "readahead")
+                else:
+                    book(now, transfers, "readahead")
 
         def maybe_readahead(now: float, rep: Optional[_Replica] = None
                             ) -> None:
@@ -704,20 +747,26 @@ class ServingEngine:
             rep.ensure_tick(loop, now)
             maybe_prefetch(now, rep)
 
-        def launch_job(job: _PagedJob, plan, now: float) -> None:
+        def launch_job(job: _PagedJob, plan, now: float
+                       ) -> Dict[str, float]:
             """Book the matched pages' reads on their owning tiers'
             channels (fencing on in-flight writes per page), then chain
             into the suffix chunks at load completion — or, in readahead
             mode, issue the chunks IMMEDIATELY so compute overlaps the
             page I/O (fetch-compute pipeline) and fence the admission on
-            whichever side finishes last."""
+            whichever side finishes last. Returns each booked page's
+            channel-read completion time so dispatch-time readahead can
+            piggyback promotions on the in-flight serving reads."""
             rep = job.rep
+            served: Dict[str, float] = {}
             if plan is not None and plan.n_pages:
                 t_done, wait = now, 0.0
                 for p in plan.pages:
                     start = max(now, ready_at.get(p.key, 0.0))
                     wait = max(wait, start - now)
-                    done = (channels[p.tier].submit(start, p.nbytes)
+                    io_done = channels[p.tier].submit(start, p.nbytes)
+                    served[p.key] = io_done
+                    done = (io_done
                             + p.xlink_delay_s + p.decompress_delay_s)
                     t_done = max(t_done, done)
                 job.rec["write_wait_s"] = wait
@@ -735,6 +784,7 @@ class ServingEngine:
                 job.t_load_done = now
                 rep.inflight[job.req.context_key] = job
                 issue_chunk(job, now)
+            return served
 
         def make_chunks(suffix: int, past: int) -> List[Tuple[int, int]]:
             if suffix <= 0:
@@ -815,21 +865,24 @@ class ServingEngine:
                        "pages_hit": plan.n_pages
                        - (1 if plan.remainder_tokens else 0),
                        "tokens_reused_frac": plan.src_tokens / t_ctx,
-                       "remainder_hit": plan.remainder_tokens > 0}
+                       "remainder_hit": plan.remainder_tokens > 0,
+                       "composed_quality": plan.quality}
             else:
                 rec = {"hit_tier": None, "method": "none", "rate": 1.0}
             job = _PagedJob(rep, lane, req, ctx, kv_final, t_ctx, now, rec,
                             make_chunks(suffix, plan.src_tokens),
                             insert_task=(ctx.task_type if suffix > 0
                                          else None))
-            launch_job(job, plan, now)
+            served = launch_job(job, plan, now)
             # sequential readahead, dispatch half: stage this run's
-            # slow-resident pages (the SSD pages just read + the NEXT
-            # pages of the chain) behind the serving reads. ``keys`` can
-            # be empty on a remainder-only match of a sub-page context —
-            # no run to walk then.
+            # slow-resident pages (the SSD pages just read — promotions
+            # of those piggyback on the in-flight serving reads — plus
+            # the NEXT pages of the chain) behind the serving reads.
+            # ``keys`` can be empty on a remainder-only match of a
+            # sub-page context — no run to walk then.
             if self.readahead_pages > 0 and plan.n_pages and keys:
-                readahead_run(now, rep, keys[0], keys, idle_only=False)
+                readahead_run(now, rep, keys[0], keys, idle_only=False,
+                              served=served)
 
         def dispatch(rep: _Replica, lane: int, req: Request,
                      now: float) -> None:
@@ -863,7 +916,10 @@ class ServingEngine:
                                  "rate": fetched.rate,
                                  "prefetch_hit": pf_hit,
                                  "remote_hit": fetched.remote,
-                                 "write_wait_s": start - now}))
+                                 "write_wait_s": start - now,
+                                 "composed_quality": self._entry_quality(
+                                     req.context_key, fetched.method,
+                                     fetched.rate)}))
             elif req.context_key in rep.inflight:
                 ent = rep.inflight[req.context_key]
                 if isinstance(ent, _PagedJob):   # chunked-whole in flight
@@ -1021,7 +1077,9 @@ class ServingEngine:
                         pages_hit=rec.get("pages_hit", 0),
                         tokens_reused_frac=rec.get("tokens_reused_frac",
                                                    0.0),
-                        remainder_hit=rec.get("remainder_hit", False)))
+                        remainder_hit=rec.get("remainder_hit", False),
+                        composed_quality=rec.get("composed_quality",
+                                                 1.0)))
                 issue(rep, now)
                 maybe_prefetch(now, rep)
 
@@ -1071,7 +1129,10 @@ class ServingEngine:
                 req.req_id, req.context_key, ctx.task_type, req.arrival_s,
                 ttft, queue_s, load_s, prefill_s, tier, method, rate,
                 self._score(req, ctx, answer, skip_quality), answer,
-                decode_s=decode_s, finish_s=finish))
+                decode_s=decode_s, finish_s=finish,
+                composed_quality=(
+                    self._entry_quality(req.context_key, method, rate)
+                    if tier is not None else 1.0)))
         return results
 
     # -- estimator probe --------------------------------------------------------
@@ -1150,6 +1211,11 @@ def summarize(results: Sequence[RequestResult],
         # remainder caching: exact repeats whose sub-page tail was served
         # from a remainder entry instead of being recomputed
         "remainder_hit_rate": sum(r.remainder_hit for r in results) / n,
+        # estimator-side composed quality of the served KV (per-piece
+        # rates folded along each request's matched run; 1.0 = every
+        # served byte lossless or recomputed)
+        "composed_quality_mean": float(
+            np.mean([r.composed_quality for r in results])),
     }
     if prefetch_stats is not None:
         # engine-level prefetch counters (issued / hits / wasted /

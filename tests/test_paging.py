@@ -130,12 +130,20 @@ def test_match_prefix_plan_and_run_counters(tmp_path):
     assert plan.nbytes == sum(p.nbytes for p in plan.pages)
     assert plan.total_delay_s > 0
     assert ctrl.counters["page_runs_partial"] == 1
-    # unrelated tokens: zero-page run counts one request-level miss
+    # per-page accounting: the divergent 3rd page is ONE miss (was:
+    # partial runs counted none), and the 2 matched pages are 2 hits
+    assert ctrl.counters["misses"] == 1
+    assert ctrl.counters["hits"] == 2
+    # unrelated tokens: every unmatched page past the run break is a
+    # miss — a fully-missed 3-page run adds 3 (was: 1 per run), so the
+    # hit-rate denominator counts pages, not runs
     miss = paged.match_prefix(
         RNG.randint(2000, 3000, 96).astype(np.int32), now=2.0)
     assert miss.n_pages == 0 and miss.kv is None
     assert ctrl.counters["page_runs_miss"] == 1
-    assert ctrl.counters["misses"] == 1
+    assert ctrl.counters["misses"] == 4
+    assert ctrl.counters["hits"] == 2
+    assert ctrl.stats()["hit_rate"] == pytest.approx(2 / 6)
 
 
 def test_page_depth_tiebreak():

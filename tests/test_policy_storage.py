@@ -200,6 +200,89 @@ def test_ssd_evict_tolerates_unlinked_file(tmp_path):
     assert not tier.has("gone") and tier.used_bytes == 0
 
 
+def test_compose_basic_properties():
+    """Unit pins for QualityEstimator.compose: empty -> 1.0, uniform
+    keeps the score, geometric mean punishes a weak link harder than
+    the arithmetic mean, token weights bias toward the longer piece."""
+    compose = QualityEstimator.compose
+    assert compose([]) == 1.0
+    assert compose([0.7, 0.7, 0.7]) == pytest.approx(0.7)
+    mixed = compose([1.0, 0.25])
+    assert mixed == pytest.approx(0.5)            # < arithmetic 0.625
+    assert compose([1.0, 0.0, 1.0]) == 0.0
+    # remainder weighting: 64-token perfect page + 8-token lossy tail
+    # scores far above the unweighted mean
+    assert compose([1.0, 0.5], [64, 8]) > compose([1.0, 0.5])
+
+
+def test_run_aware_depth_discounted_utility(tmp_path):
+    """PR-6 tentpole: pg-*/rem-* entries rank by their RUN's EWMA
+    discounted by page depth — a deep page of a hot run still out-ranks
+    any page of a cold run, and depth orders pages within one run."""
+    from repro.core.estimator import RunFrequencyEstimator
+
+    c, clock = build(tmp=str(tmp_path), dram_mb=8)
+    pol = c.policy
+    assert pol.run_freq is c.run_freq       # controller auto-binds
+    run_freq = RunFrequencyEstimator(halflife_s=600)
+    pol.bind_run_signals(run_freq, {"pg-hot-0": "pg-hot-0",
+                                    "pg-hot-1": "pg-hot-0",
+                                    "rem-hot-2": "pg-hot-0",
+                                    "pg-cold-0": "pg-cold-0"}.get)
+    t = 1.0
+    for _ in range(30):                     # hot run hit repeatedly
+        run_freq.note_run("pg-hot-0", t)
+        t += 0.2
+    run_freq.note_run("pg-cold-0", t)       # cold run seen once
+    hot0 = pol._entry_freq("pg-hot-0", t)
+    hot1 = pol._entry_freq("pg-hot-1", t)
+    rem2 = pol._entry_freq("rem-hot-2", t)
+    cold = pol._entry_freq("pg-cold-0", t)
+    # depth discount orders one run's pages: page0 > page1 > remainder
+    assert hot0 > hot1 > rem2
+    assert hot1 == pytest.approx(hot0 * pol.depth_discount)
+    assert rem2 == pytest.approx(hot0 * pol.depth_discount ** 2)
+    # the hot run's DEEPEST entry still beats the cold run's first page
+    assert rem2 > cold
+    # unknown runs and whole-context keys fall back to the per-entry EWMA
+    assert (pol._entry_freq("pg-unknown-0", t)
+            == pol.freq.predict("pg-unknown-0", t))
+    assert pol._entry_freq("qa-3", t) == pol.freq.predict("qa-3", t)
+
+
+def test_evict_is_ladder_rung_on_every_tier(tmp_path):
+    """EVICPRESS: eviction is scored on the same drop-per-byte scale as
+    recompress/demote on EVERY tier. With alpha=0 a resident entry's
+    utility is strictly negative (pure delay), so evicting it from the
+    FAST tier is a strict improvement the greedy must take directly —
+    not a demotion that shuffles the negative utility to the SSD."""
+    from repro.core.entry import EntryMeta
+
+    c, clock = build(alpha=0.0, tmp=str(tmp_path), dram_mb=8)
+    pol = c.policy
+    clock[0] = 1.0
+    c.insert("e0", make_kv(T=128), "qa")
+    meta = c.meta["e0"]
+    assert meta.tier is not None
+    assert pol.current_utility(meta, clock[0]) < 0
+    mv = pol.pick_move(meta.tier, [meta], clock[0],
+                       kv_lookup=c.executor.proxies.get)
+    assert mv.kind == "evict" and mv.tier == meta.tier
+    assert mv.drop_per_byte < 0            # removing it is an improvement
+    # with a positive quality weight the same entry is NOT evicted from
+    # DRAM: recompression/demotion preserve utility more cheaply
+    c2, clock2 = build(alpha=10.0, tmp=str(tmp_path / "pos"), dram_mb=8)
+    clock2[0] = 1.0
+    c2.insert("e0", make_kv(T=128), "qa")
+    m2 = c2.meta["e0"]
+    for _ in range(5):
+        clock2[0] += 0.2
+        c2.fetch("e0")
+    mv2 = c2.policy.pick_move(m2.tier, [m2], clock2[0],
+                              kv_lookup=c2.executor.proxies.get)
+    assert mv2 is not None and mv2.kind != "evict"
+
+
 def test_marginal_utility_prefers_cheap_drop(tmp_path):
     """The greedy must pick recompression of a low-value entry over
     evicting a high-frequency one."""

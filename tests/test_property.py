@@ -107,6 +107,45 @@ def test_split_join_roundtrip_property(t, page, layers, feat, with_state):
         np.testing.assert_array_equal(rebuilt[name], a)
 
 
+@given(quals=st.lists(st.floats(0.0, 1.0), min_size=1, max_size=12),
+       idx=st.integers(0, 11), new_rate=st.floats(0.0, 1.0),
+       page_tokens=st.integers(1, 128), rem_tokens=st.integers(0, 127))
+@settings(max_examples=60, deadline=None)
+def test_composed_quality_monotone_in_any_page_rate(quals, idx, new_rate,
+                                                    page_tokens, rem_tokens):
+    """Composed run quality is monotone non-increasing when any single
+    page's compression rate decreases (through a monotone quality-rate
+    curve), stays in [0, 1], and equals the per-page score on uniform
+    runs. The weighting (full pages + a sub-page remainder) must not
+    break monotonicity."""
+    from repro.core.estimator import QualityEstimator
+    qe = QualityEstimator()
+    # monotone non-decreasing synthetic curve: lower rate -> lower quality
+    qe.set_curve("qa", "kivi", [(0.0, 0.0), (0.25, 0.5), (1.0, 1.0)])
+    idx = idx % len(quals)
+    weights = [page_tokens] * len(quals)
+    if rem_tokens:
+        weights[-1] = rem_tokens        # last piece is the remainder
+    base = QualityEstimator.compose(quals, weights)
+    assert 0.0 <= base <= 1.0
+    # uniform run keeps the per-page score
+    u = QualityEstimator.compose([quals[idx]] * len(quals))
+    assert u == pytest.approx(quals[idx], abs=1e-9)
+    # drop one page's quality through the monotone curve: the composed
+    # score must not increase
+    old_q = qe.predict("qa", "kivi", 1.0, redundancy=0.5)
+    new_q = qe.predict("qa", "kivi", new_rate, redundancy=0.5)
+    assert new_q <= old_q + 1e-12
+    lowered = list(quals)
+    lowered[idx] = min(lowered[idx], new_q)
+    assert (QualityEstimator.compose(lowered, weights) <= base + 1e-12)
+    # a zero-quality weighted piece zeroes the composition
+    zeroed = list(quals)
+    zeroed[idx] = 0.0
+    if weights[idx] > 0:
+        assert QualityEstimator.compose(zeroed, weights) == 0.0
+
+
 @given(n=st.integers(16, 2048))
 @settings(max_examples=20, deadline=None)
 def test_q8_codec_roundtrip_bound(n):

@@ -426,3 +426,35 @@ def test_degenerate_reproduces_committed_fig6(runner):
     ref = load_committed_row(csv, "paged", "benchmarks/fig6_paging.py")
     for key in f6.CSV_KEYS:
         assert abs(s[key] - ref[key]) <= 1.5e-6, (key, s[key], ref[key])
+
+
+def test_degenerate_reproduces_committed_fig7(runner):
+    """The PR-6 per-page compression knobs change NOTHING when the
+    policy is fixed lossless: rebuild fig7's 'paged' configuration
+    (readahead and remainder off too) and match the committed
+    experiments/fig7_readahead.csv row exactly."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    csv = os.path.join(root, "experiments", "fig7_readahead.csv")
+    if not os.path.exists(csv):
+        pytest.skip("no committed fig7 artifact")
+    sys.path.insert(0, os.path.join(root, "benchmarks"))
+    try:
+        import fig7_readahead as f7
+        from artifacts import load_committed_row
+    finally:
+        sys.path.pop(0)
+
+    rng = np.random.RandomState(23)
+    cfg = get_config(f7.ARCH, smoke=True)
+    contexts = make_prefix_sharing_contexts(
+        rng, cfg.vocab_size, n_docs=3, n_variants=3,
+        prefix_len=f7.PREFIX, suffix_len=f7.SUFFIX, n_probes=2)
+    requests = f7.skewed_requests(contexts, 36, f7.GAP_S, max_new=6)
+    prefills = {c.key: runner.prefill_entry(c.tokens) for c in contexts}
+    s, _, _ = f7.run_mode(runner, contexts, get_config(f7.ARCH), prefills,
+                          requests, readahead=0, remainder=False,
+                          label="degen", skip_quality=True)
+
+    ref = load_committed_row(csv, "paged", "benchmarks/fig7_readahead.py")
+    for key in f7.CSV_KEYS:
+        assert abs(s[key] - ref[key]) <= 1.5e-6, (key, s[key], ref[key])
