@@ -29,7 +29,7 @@ class KIVICompression(CompressionMethod):
 
     # -- rate bookkeeping ----------------------------------------------------
     def _rate_for_bits(self, kv: KVData, bits: int) -> float:
-        return self.estimate_nbytes_bits(kv, bits) / max(kv_nbytes(kv), 1)
+        return self.estimate_quantized_nbytes(kv, bits) / max(kv_nbytes(kv), 1)
 
     def _bits_for_rate(self, kv: KVData, rate: float) -> int:
         pairs = [(abs(self._rate_for_bits(kv, b) - rate), b) for b in BITS_LADDER]
@@ -41,7 +41,7 @@ class KIVICompression(CompressionMethod):
             return tuple((b / 32) + 8 / (self.group_size * 4) for b in BITS_LADDER)
         return tuple(self._rate_for_bits(kv, b) for b in BITS_LADDER)
 
-    def estimate_nbytes_bits(self, kv: KVData, bits: int) -> int:
+    def estimate_quantized_nbytes(self, kv: KVData, bits: int) -> int:
         total = 0
         for name, a in kv.items():
             if name == "positions":
@@ -64,7 +64,7 @@ class KIVICompression(CompressionMethod):
         return int(total)
 
     def estimate_nbytes(self, kv: KVData, rate: float) -> int:
-        return self.estimate_nbytes_bits(kv, self._bits_for_rate(kv, rate))
+        return self.estimate_quantized_nbytes(kv, self._bits_for_rate(kv, rate))
 
     # -- compress / decompress ------------------------------------------------
     def compress(self, kv: KVData, rate: float,

@@ -35,7 +35,7 @@ class DropQuantCompression(CompressionMethod):
 
     def _est(self, kv: KVData, keep: float, bits: int) -> int:
         dropped = self.stream.compress(kv, keep)   # cheap: slicing only
-        return self.kivi.estimate_nbytes_bits(dropped.arrays, bits)
+        return self.kivi.estimate_quantized_nbytes(dropped.arrays, bits)
 
     def _pick(self, kv: KVData, rate: float):
         ladder = self.rates(kv)

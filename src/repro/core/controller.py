@@ -33,7 +33,7 @@ placement decision* on the data plane (bytes land immediately, so byte
 conservation is exact at every event), while the *time cost* of each
 byte movement is reported as a ``Transfer`` appended to the caller's
 ``transfers`` list. The event engine books those transfers on the
-destination tier's write ``IOChannel`` (``Tier.store_delay``) and the
+destination tier's write ``IOChannel`` (``Tier.store_delay_s``) and the
 source tier's read channel, and fences fetches of still-writing keys —
 so insert write-back, MCKP demotions, and prefetch promotions all
 contend with serving fetches in simulated time. Callers that pass no
@@ -132,7 +132,9 @@ class AdaptCacheController:
                  tier_order: Sequence[str], policy: BasePolicy,
                  delay_profile: DelayProfile,
                  freq: FrequencyEstimator,
-                 clock=time.monotonic,
+                 # standalone (non-engine) use falls back to wall time
+                 # by design; serving rigs always wire a SimClock here
+                 clock=time.monotonic,  # simcheck: ignore[wallclock]
                  topology: Optional[StorageTopology] = None):
         self.methods = methods
         self.tiers = tiers
@@ -221,13 +223,13 @@ class AdaptCacheController:
             return None
         tier = self.tiers[meta.tier]
         kv, entry = self.executor.fetch(meta)
-        load = tier.load_delay(meta.nbytes)
-        dec = self.delay_profile.decompress_delay(meta.method, meta.nbytes)
+        load = tier.load_delay_s(meta.nbytes)
+        dec = self.delay_profile.decompress_delay_s(meta.method, meta.nbytes)
         # cross-replica hit: the bytes live in a sibling replica's DRAM —
         # the fetch pays the owner's read path PLUS the replica link
         remote = (self.topology is not None
                   and not self.topology.is_local_hit(meta.tier, replica))
-        xlink = self.topology.cross_delay(meta.nbytes) if remote else 0.0
+        xlink = self.topology.cross_delay_s(meta.nbytes) if remote else 0.0
         meta.hits += 1
         meta.last_hit = now
         self.freq.on_hit(key, now)
@@ -377,7 +379,7 @@ class AdaptCacheController:
                 # move frees and drop the entry from the hypothetical
                 # tier state — conservative for repeated recompression
                 # (under-counts freeable bytes, never over-approves)
-                freed += (move.bytes_freed if move.kind == "recompress"
+                freed += (move.freed_bytes if move.kind == "recompress"
                           else victim.nbytes)
                 candidates = [m for m in candidates if m.key != move.key]
             if freed < need:

@@ -6,7 +6,6 @@ policy can evaluate candidate states without touching stored bytes.
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, Optional, Tuple
 
 import numpy as np

@@ -12,7 +12,7 @@ freed**: whenever a tier is over capacity, the cheapest move is applied:
              demote to the next tier (same method/rate),
              evict (from the last tier) }
 
-    drop/byte = (U_before − U_after) / bytes_freed_in_this_tier
+    drop/byte = (U_before − U_after) / freed_bytes_in_this_tier
 
 which is exactly the paper's (U(i,m) − U(i,n)) / (size(i)·(m−n)) with our
 size bookkeeping. FixedPolicy implements the baselines (no-compression LRU,
@@ -55,7 +55,7 @@ class Move:
     tier: str                       # tier the move frees bytes in
     method: str = "none"            # target method (recompress)
     rate: float = 1.0               # target rate (recompress)
-    bytes_freed: int = 0
+    freed_bytes: int = 0
     drop_per_byte: float = 0.0
     dst_tier: Optional[str] = None  # tier receiving the bytes (None: evict)
 
@@ -138,7 +138,7 @@ class AdaptivePolicy(BasePolicy):
         self.tier_order = list(tier_order)      # fast -> slow
         self.quality = quality
         self.freq = freq
-        self.delay = delay_profile
+        self.delay_profile = delay_profile
         self.alpha = alpha
         self.topology = topology
         # run-aware page frequency (bound by the controller): a page's
@@ -171,18 +171,18 @@ class AdaptivePolicy(BasePolicy):
         return self.freq.predict(key, now)
 
     # -- utility ------------------------------------------------------------
-    def _delay_term(self, tier_name: str, method: str, nbytes: int,
+    def _delay_term_s(self, tier_name: str, method: str, nbytes: int,
                     home_tier: Optional[str] = None) -> float:
         tier = self.tiers[tier_name]
-        d = (tier.load_delay(nbytes)
-             + self.delay.decompress_delay(method, nbytes))
+        d = (tier.load_delay_s(nbytes)
+             + self.delay_profile.decompress_delay_s(method, nbytes))
         # a sibling replica's DRAM serves the home replica's hits only
         # through the replica-to-replica link — price that copy in
         if (home_tier is not None and tier_name != home_tier
                 and self.topology is not None
                 and self.topology.level(tier_name) == 0
                 and self.topology.replica_of(tier_name) is not None):
-            d += self.topology.cross_delay(nbytes)
+            d += self.topology.cross_delay_s(nbytes)
         return d
 
     def utility(self, meta: EntryMeta, tier_name: str, method: str,
@@ -190,7 +190,7 @@ class AdaptivePolicy(BasePolicy):
         f = self._entry_freq(meta.key, now)
         q = self.quality.predict(meta.task_type, method, rate, meta.redundancy)
         return f * (self.alpha * q
-                    - self._delay_term(tier_name, method, nbytes,
+                    - self._delay_term_s(tier_name, method, nbytes,
                                        home_tier=self.home_tier(meta)))
 
     def current_utility(self, meta: EntryMeta, now: float) -> float:

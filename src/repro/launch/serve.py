@@ -135,6 +135,12 @@ def main(argv=None) -> int:
                          "tokens) per context so exact repeats are full "
                          "hits instead of re-prefilling the tail "
                          "(requires --paged)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run the event engine under the SimSanitizer "
+                         "runtime invariant checker (byte conservation, "
+                         "causality, write fencing, transfer accounting; "
+                         "read-only — results are bit-identical; also "
+                         "enabled by SIMCHECK=1)")
     ap.add_argument("--serialized", action="store_true",
                     help="use the legacy load-blocking loop (baseline)")
     ap.add_argument("--seed", type=int, default=0)
@@ -178,7 +184,8 @@ def main(argv=None) -> int:
                        affinity=args.affinity,
                        readahead_pages=args.readahead_pages,
                        remainder_cache=args.remainder_cache,
-                       depth_discount=args.depth_discount)
+                       depth_discount=args.depth_discount,
+                       sanitize=args.sanitize)
     if args.fit_estimator and args.policy == "adaptive":
         fit_quality_estimator(rig, contexts)
         print("quality estimator fitted")

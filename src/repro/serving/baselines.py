@@ -61,7 +61,8 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
                  affinity: bool = False,
                  readahead_pages: int = 0,
                  remainder_cache: bool = False,
-                 depth_discount: float = 0.85) -> EngineRig:
+                 depth_discount: float = 0.85,
+                 sanitize: bool = False) -> EngineRig:
     methods = default_registry()
     smoke_cfg = runner.model.cfg
     if topology is None:
@@ -92,12 +93,12 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
     order = topology.tier_names
 
     freq = FrequencyEstimator(halflife_s=600.0)
-    delay = DelayProfile({m: (bps / scale if np.isfinite(bps) else bps)
+    delay_profile = DelayProfile({m: (bps / scale if np.isfinite(bps) else bps)
                           for m, bps in DEFAULT_DECOMPRESS_BPS.items()})
     qe = quality_est or QualityEstimator()
 
     if policy == "adaptive":
-        pol = AdaptivePolicy(methods, tiers, order, qe, freq, delay,
+        pol = AdaptivePolicy(methods, tiers, order, qe, freq, delay_profile,
                              alpha=alpha, topology=topology,
                              depth_discount=depth_discount)
     elif policy == "prefill":
@@ -113,8 +114,8 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
         pol = FixedPolicy(methods, order, mname, rate, topology=topology)
 
     clock = SimClock()
-    ctrl = AdaptCacheController(methods, tiers, order, pol, delay, freq,
-                                clock=clock, topology=topology)
+    ctrl = AdaptCacheController(methods, tiers, order, pol, delay_profile,
+                                freq, clock=clock, topology=topology)
     # composed-quality pricing: match_prefix scores each served piece
     # through the same estimator the adaptive policy optimizes with, so
     # FetchPlan.quality / RequestResult.composed_quality are consistent
@@ -129,7 +130,7 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
                         prefetch_deadline=prefetch_deadline,
                         page_tokens=page_tokens, chunk_tokens=chunk_tokens,
                         affinity=affinity, readahead_pages=readahead_pages,
-                        remainder_cache=remainder_cache)
+                        remainder_cache=remainder_cache, sanitize=sanitize)
     return EngineRig(eng, ctrl, qe, clock)
 
 

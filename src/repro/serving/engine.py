@@ -123,6 +123,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -134,6 +135,7 @@ from repro.serving.chunking import (
 )
 from repro.serving.metrics import percentile_summary, quality_score, safe_mean
 from repro.serving.runner import ModelRunner
+from repro.serving.sanitizer import SimSanitizer
 from repro.serving.scheduler import (
     EV_ARRIVAL, EV_CHUNK_DONE, EV_LOAD_DONE, EV_PREFILL_DONE, EV_TICK,
     EV_WRITE_DONE, EVENT_NAMES, ContinuousBatcher, EventLoop, LaneSet,
@@ -259,7 +261,8 @@ class ServingEngine:
                  chunk_tokens: int = 0,
                  affinity: bool = False,
                  readahead_pages: int = 0,
-                 remainder_cache: bool = False):
+                 remainder_cache: bool = False,
+                 sanitize: bool = False):
         if n_replicas < 1 or n_lanes < 1:
             raise ValueError("need at least one replica with one lane")
         if (readahead_pages > 0 or remainder_cache) and page_tokens <= 0:
@@ -336,6 +339,12 @@ class ServingEngine:
         self._ref_cache: Dict[str, List[int]] = {}
         self._prefill_cache: Dict[str, Any] = {}
         self.last_trace: List[Tuple[float, str, Dict[str, Any]]] = []
+        # runtime invariant checking (SimSanitizer): explicit flag or
+        # the SIMCHECK env toggle (CI runs the smoke replays under it).
+        # The sanitizer only OBSERVES — results are bit-identical.
+        self.sanitize = (sanitize
+                         or os.environ.get("SIMCHECK", "") not in ("", "0"))
+        self.last_sanitizer: Optional[SimSanitizer] = None
 
     def _entry_quality(self, key: str, method: str, rate: float) -> float:
         """Estimator-side quality of one served whole entry — the
@@ -396,7 +405,7 @@ class ServingEngine:
         self.chunk_stats = {"chunks_issued": 0, "queue_s": 0.0,
                             "ticks_delayed": 0, "tick_delay_s": 0.0}
         # per-tier channels: duplex tiers get independent read/write
-        # queues (writes priced by Tier.store_delay); a half-duplex SSD
+        # queues (writes priced by Tier.store_delay_s); a half-duplex SSD
         # REUSES its read channel for writes, so serving reads,
         # write-backs, and prefetch transfers arbitrate in one
         # shared-budget queue
@@ -429,6 +438,16 @@ class ServingEngine:
             for r in replicas:
                 r.compute_chan = ComputeChannel(f"compute{r.idx}")
                 r.compute_stats = self.chunk_stats
+        san = self.last_sanitizer = (
+            SimSanitizer(self.controller, EVENT_NAMES) if self.sanitize
+            else None)
+        if san is not None:
+            loop.sanitizer = san
+            san.watch_channels(channels.values())
+            san.watch_channels(wchannels.values())
+            san.watch_channels(r.prefill_chan for r in replicas)
+            if self.chunk_tokens > 0:
+                san.watch_channels(r.compute_chan for r in replicas)
         # per-request breakdown records, filled at admission
         pending: Dict[int, Dict[str, Any]] = {}
         # in-flight writes: key -> sim time its bytes are fully landed;
@@ -438,7 +457,7 @@ class ServingEngine:
         prefetched: Dict[str, bool] = {}
         # keys barred from re-promotion after a wasted promotion
         # (shared by entry prefetch and page readahead)
-        pf_cooldown: Dict[str, float] = {}
+        pf_cooldown_s: Dict[str, float] = {}
         pf_inflight = [0]
         # sequential readahead: page key -> run key for promotions not
         # yet rewarded by a hit; ra_writes marks whose promote Transfer
@@ -467,14 +486,14 @@ class ServingEngine:
                 if tr.src_tier is not None:
                     t0 = channels[tr.src_tier].submit(now, tr.read_nbytes)
                 # the write is priced by the destination tier's own
-                # store_delay model, queued on its write channel
+                # store_delay_s model, queued on its write channel
                 start, done = wchannels[tr.dst_tier].book_service(
-                    t0, self.controller.tiers[tr.dst_tier].store_delay(
+                    t0, self.controller.tiers[tr.dst_tier].store_delay_s(
                         tr.nbytes))
                 ready_at[tr.key] = max(ready_at.get(tr.key, 0.0), done)
                 if tr.kind == "demote" and prefetched.pop(tr.key, None):
                     self.prefetch_stats["wasted"] += 1
-                    pf_cooldown[tr.key] = now + self.prefetch_cooldown_s
+                    pf_cooldown_s[tr.key] = now + self.prefetch_cooldown_s
                 elif (tr.kind in ("demote", "insert")
                         and ra_inflight.pop(tr.key, None) is not None):
                     # readahead promotion destroyed before any request
@@ -483,10 +502,12 @@ class ServingEngine:
                     # (the re-inserted page must not later be credited
                     # as a readahead hit). Wasted slow-channel bandwidth.
                     self.readahead_stats["wasted"] += 1
-                    pf_cooldown[tr.key] = now + self.prefetch_cooldown_s
+                    pf_cooldown_s[tr.key] = now + self.prefetch_cooldown_s
                 note(now, "write_issue", key=tr.key, move=tr.kind,
                      tier=tr.dst_tier, nbytes=tr.nbytes, done=done,
                      cause=cause)
+                if san is not None:
+                    san.note_transfer_booked(tr, done)
                 loop.push(done, EV_WRITE_DONE, (tr, cause))
                 out.append((tr, start - now, done - start))
             return out
@@ -498,7 +519,7 @@ class ServingEngine:
                     now=now, limit=8, min_hz=self.prefetch_min_hz):
                 if ready_at.get(key, 0.0) > now:
                     continue                 # already moving
-                if pf_cooldown.get(key, 0.0) > now:
+                if pf_cooldown_s.get(key, 0.0) > now:
                     continue                 # recently bounced / suppressed
                 src = self.controller.lookup(key)
                 if src is None or is_dram(src):
@@ -534,14 +555,14 @@ class ServingEngine:
             dname = dst or fast_tier
             nb = self.controller.tiers[src].entry_nbytes(key)
             dst_tier = self.controller.tiers[dname]
-            read_done = now + self.controller.tiers[src].load_delay(nb)
+            read_done = now + self.controller.tiers[src].load_delay_s(nb)
             est_done = max(read_done, wchannels[dname].next_free(now)) \
-                + dst_tier.store_delay(nb)
+                + dst_tier.store_delay_s(nb)
             hz = self.controller.freq.predict(key, now)
             if hz <= 0.0 or est_done <= now + 1.0 / hz:
                 return True
             self.prefetch_stats["suppressed"] += 1
-            pf_cooldown[key] = now + self.prefetch_cooldown_s
+            pf_cooldown_s[key] = now + self.prefetch_cooldown_s
             note(now, "prefetch_suppress", key=key, est_done=est_done,
                  predicted_gap_s=1.0 / hz)
             return False
@@ -572,7 +593,7 @@ class ServingEngine:
                 if tier is None or is_dram(tier):
                     continue         # a gap re-fills at insert time
                 if (key in ra_inflight or ready_at.get(key, 0.0) > now
-                        or pf_cooldown.get(key, 0.0) > now):
+                        or pf_cooldown_s.get(key, 0.0) > now):
                     continue
                 if idle_only and channels[tier].queue_depth(now) > 0:
                     return           # don't contend with serving reads
@@ -594,12 +615,14 @@ class ServingEngine:
                     # the promotion triggered still book normally
                     t0 = max(now, served[key])
                     _, done = wchannels[tr.dst_tier].book_service(
-                        t0, self.controller.tiers[tr.dst_tier].store_delay(
+                        t0, self.controller.tiers[tr.dst_tier].store_delay_s(
                             tr.nbytes))
                     ready_at[tr.key] = max(ready_at.get(tr.key, 0.0), done)
                     self.readahead_stats["piggybacked"] += 1
                     note(now, "readahead_piggyback", key=key, run=run_key,
                          dst=tr.dst_tier, nbytes=tr.nbytes, done=done)
+                    if san is not None:
+                        san.note_transfer_booked(tr, done)
                     loop.push(done, EV_WRITE_DONE, (dataclasses.replace(
                         tr, src_tier=None, read_nbytes=0), "readahead"))
                     book(now, [t for t in transfers if t is not tr],
@@ -760,16 +783,18 @@ class ServingEngine:
             rep = job.rep
             served: Dict[str, float] = {}
             if plan is not None and plan.n_pages:
-                t_done, wait = now, 0.0
+                t_done, wait_s = now, 0.0
                 for p in plan.pages:
                     start = max(now, ready_at.get(p.key, 0.0))
-                    wait = max(wait, start - now)
+                    wait_s = max(wait_s, start - now)
+                    if san is not None:
+                        san.note_read(p.key, start)
                     io_done = channels[p.tier].submit(start, p.nbytes)
                     served[p.key] = io_done
                     done = (io_done
                             + p.xlink_delay_s + p.decompress_delay_s)
                     t_done = max(t_done, done)
-                job.rec["write_wait_s"] = wait
+                job.rec["write_wait_s"] = wait_s
                 note(now, "page_load_issue", req_id=job.req.req_id,
                      replica=rep.idx, pages=plan.n_pages,
                      nbytes=plan.nbytes, done=t_done)
@@ -818,7 +843,10 @@ class ServingEngine:
                 # promoted bytes stay where they landed; the key cools
                 # down so the stale branch is not re-staged)
                 chain = set(keys)
-                for k, rk in list(ra_inflight.items()):
+                # sorted(): cancellation emits trace entries and cools
+                # keys down — pin the scan order so the replay trace is
+                # independent of promotion insertion history
+                for k, rk in sorted(ra_inflight.items()):
                     if rk == keys[0] and k not in chain:
                         ra_inflight.pop(k)
                         # a page the LRU already evicted outright (no
@@ -828,7 +856,7 @@ class ServingEngine:
                             self.readahead_stats["wasted"] += 1
                         else:
                             self.readahead_stats["cancelled"] += 1
-                        pf_cooldown[k] = now + self.prefetch_cooldown_s
+                        pf_cooldown_s[k] = now + self.prefetch_cooldown_s
                         note(now, "readahead_cancel", key=k, run=rk)
             # a full page-run hit never touches the real-compute prefill:
             # the lane content comes entirely from the fetched pages
@@ -895,6 +923,8 @@ class ServingEngine:
                 # fence: the entry's bytes may still be in flight toward
                 # its tier (async insert/demote/promote)
                 start = max(now, ready_at.get(req.context_key, 0.0))
+                if san is not None:
+                    san.note_read(req.context_key, start)
                 # the read is booked on the OWNING tier's channel (a
                 # remote DRAM hit contends with the owner's local reads)
                 # and a cross-replica hit additionally pays the link
@@ -962,7 +992,9 @@ class ServingEngine:
 
         req_by_id = {r.req_id: r for r in requests}
         for req in requests:
-            loop.push(req.arrival_s, EV_ARRIVAL, req)
+            # a workload may stamp arrivals before the clock start; they
+            # land immediately (push rejects past-time scheduling)
+            loop.push(max(loop.now, req.arrival_s), EV_ARRIVAL, req)
 
         while loop:
             now, kind, payload = loop.pop()
@@ -1017,13 +1049,13 @@ class ServingEngine:
                             if tr.kind == "insert":
                                 hit["wb_queue_s"] = q_s
                                 hit["wb_transfer_s"] = x_s
-                    delays = {"load_s": 0.0, "prefill_s": now - issue_t}
+                    timing = {"load_s": 0.0, "prefill_s": now - issue_t}
                 else:
                     hit = extra
-                    delays = {"load_s": now - issue_t, "prefill_s": 0.0}
+                    timing = {"load_s": now - issue_t, "prefill_s": 0.0}
                 rep.admit(lane, req, kv, orig_len, now)
                 pending[req.req_id] = {
-                    "queue_s": issue_t - req.arrival_s, **delays, **hit,
+                    "queue_s": issue_t - req.arrival_s, **timing, **hit,
                     "replica": rep.idx}
                 note(now, EVENT_NAMES[kind], req_id=req.req_id,
                      replica=rep.idx, lane=lane)
@@ -1032,6 +1064,8 @@ class ServingEngine:
 
             elif kind == EV_WRITE_DONE:
                 tr, cause = payload
+                if san is not None:
+                    san.note_transfer_done(tr, now)
                 if ready_at.get(tr.key, 0.0) <= now:
                     ready_at.pop(tr.key, None)
                 if tr.kind == "promote":
@@ -1049,6 +1083,8 @@ class ServingEngine:
                 done = rep.tick(loop, now)
                 if done is None:            # all lanes idle; chain stopped
                     maybe_prefetch(now, rep)
+                    if san is not None:
+                        san.after_event(now, kind)
                     continue
                 note(now, "tick", replica=rep.idx, finished=len(done),
                      lanes=sum(s.active for s in rep.batcher.slots)
@@ -1083,6 +1119,11 @@ class ServingEngine:
                 issue(rep, now)
                 maybe_prefetch(now, rep)
 
+            if san is not None:
+                san.after_event(now, kind)
+
+        if san is not None:
+            san.finish(loop.now)
         results.sort(key=lambda r: (r.arrival_s, r.req_id))
         return results
 

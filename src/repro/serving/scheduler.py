@@ -250,13 +250,17 @@ EVENT_NAMES = {EV_LOAD_DONE: "load_done", EV_PREFILL_DONE: "prefill_done",
 class EventLoop:
     """Priority queue of timestamped events with a monotonic sim clock.
 
-    The clock never moves backwards: an event scheduled in the past (e.g.
-    an arrival timestamped before the current clock) is processed *at*
-    the current clock. ``max_events`` is the zero-progress livelock guard
-    — the seed ``run_continuous`` could spin forever re-reading a past
-    arrival without advancing time; here any handler that keeps
-    scheduling same-time work trips the guard with a clear error instead
-    of hanging the process.
+    The clock never moves backwards. Scheduling an event in the past
+    (``when < now``) raises ``ValueError`` at ``push`` time — handlers
+    always stamp completions at ``now + service`` or ``max(now, ...)``,
+    so a past-time push is a simulation bug, not a policy choice. The
+    ``max(now, when)`` clamp in ``pop`` remains as a second line of
+    defense (and ``SimSanitizer.on_pop`` checks it when sanitizing).
+    ``max_events`` is the zero-progress livelock guard — the seed
+    ``run_continuous`` could spin forever re-reading a past arrival
+    without advancing time; here any handler that keeps scheduling
+    same-time work trips the guard with a clear error instead of
+    hanging the process.
     """
 
     def __init__(self, max_events: int = 2_000_000):
@@ -265,8 +269,15 @@ class EventLoop:
         self.now = 0.0
         self.max_events = max_events
         self.processed = 0
+        # optional repro.serving.sanitizer.SimSanitizer (read-only hooks)
+        self.sanitizer = None
 
     def push(self, when: float, kind: int, payload: Any = None) -> None:
+        if when < self.now:
+            raise ValueError(
+                f"cannot schedule '{EVENT_NAMES.get(kind, kind)}' at "
+                f"t={when:.9f}: simulated clock is already at "
+                f"t={self.now:.9f}")
         heapq.heappush(self._heap, (when, kind, next(self._seq), payload))
 
     def __bool__(self) -> bool:
@@ -274,6 +285,8 @@ class EventLoop:
 
     def pop(self) -> Tuple[float, int, Any]:
         when, kind, _, payload = heapq.heappop(self._heap)
+        if self.sanitizer is not None:
+            self.sanitizer.on_pop(self.now, when, kind)
         self.now = max(self.now, when)      # monotonic sim clock
         self.processed += 1
         if self.processed > self.max_events:
@@ -380,7 +393,9 @@ def run_continuous(batcher: ContinuousBatcher, requests: Sequence[Request],
     lanes = LaneSet(batcher)
     results: List[ScheduledResult] = []
     for req in requests:
-        loop.push(req.arrival_s, EV_ARRIVAL, req)
+        # a workload may stamp arrivals before the clock start; they
+        # land immediately (push rejects past-time scheduling outright)
+        loop.push(max(loop.now, req.arrival_s), EV_ARRIVAL, req)
 
     def dispatch(lane: int, req: Request, now: float) -> None:
         kv, orig_len, load_s = load_fn(req, now)

@@ -27,7 +27,7 @@ from repro.configs.base import ModelConfig
 class DeviceModel:
     name: str
     peak_flops: float          # /s
-    hbm_bw: float              # bytes/s
+    hbm_bps: float              # bytes/s
     mfu_prefill: float = 0.45
     mfu_decode: float = 0.08
 
@@ -53,8 +53,8 @@ class TimeModel:
         flops = 2.0 * self.n_active_params * batch
         t_flops = flops / (self.device.peak_flops * self.device.mfu_decode)
         # weights read once per step + per-seq KV reads
-        bytes_rd = 2.0 * self.n_active_params + batch * ctx_tokens * kvb
-        t_mem = bytes_rd / self.device.hbm_bw
+        read_bytes = 2.0 * self.n_active_params + batch * ctx_tokens * kvb
+        t_mem = read_bytes / self.device.hbm_bps
         return max(t_flops, t_mem)
 
     def chunk_prefill_s(self, n_new: int, n_past: int,
@@ -72,7 +72,7 @@ class TimeModel:
                if kv_bytes_per_token is None else kv_bytes_per_token)
         flops = 2.0 * self.n_active_params * n_new
         t_flops = flops / (self.device.peak_flops * self.device.mfu_prefill)
-        t_mem = (n_past * kvb) / self.device.hbm_bw
+        t_mem = (n_past * kvb) / self.device.hbm_bps
         return t_flops + t_mem
 
 
@@ -106,7 +106,7 @@ class IOChannel:
     def book_service(self, now: float, service_s: float
                      ) -> "Tuple[float, float]":
         """Book an externally-priced service time (e.g. a tier's
-        ``store_delay``) and return ``(start, done)``: queue wait is
+        ``store_delay_s``) and return ``(start, done)``: queue wait is
         ``start - now``, pure transfer time is ``done - start``."""
         i = min(range(len(self._free_at)), key=self._free_at.__getitem__)
         start = max(now, self._free_at[i])
@@ -146,10 +146,10 @@ def build_tier_channels(tiers, io_streams, duplex_for):
 
     channels, wchannels = {}, {}
     for name, tier in tiers.items():
-        rc = IOChannel(name, tier.spec.read_bw, tier.spec.latency_s,
+        rc = IOChannel(name, tier.spec.read_bps, tier.spec.latency_s,
                        streams(name))
         if duplex_for(name):
-            wc = IOChannel(f"{name}_w", tier.spec.write_bw,
+            wc = IOChannel(f"{name}_w", tier.spec.write_bps,
                            tier.spec.latency_s, streams(name))
         else:
             wc = rc                      # one pool, both directions

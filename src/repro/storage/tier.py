@@ -39,8 +39,8 @@ from repro.core.compression.base import CompressedEntry
 class DeviceSpec:
     name: str
     capacity_bytes: int
-    read_bw: float          # bytes/s toward the accelerator
-    write_bw: float
+    read_bps: float          # bytes/s toward the accelerator
+    write_bps: float
     latency_s: float = 0.0
 
 
@@ -52,12 +52,12 @@ PAPER_SSD = DeviceSpec("ssd", 400 << 30, 1e9, 1e9, 100e-6)
 class Tier:
     """Base tier: capacity accounting + load/store delay models.
 
-    ``load_delay`` prices the read path (fetch toward the accelerator);
-    ``store_delay`` prices the write path and is the service time the
+    ``load_delay_s`` prices the read path (fetch toward the accelerator);
+    ``store_delay_s`` prices the write path and is the service time the
     event engine books on the tier's write ``IOChannel`` for insert
     write-back, MCKP demotions, and prefetch promotions — writes queue
     and contend in simulated time instead of landing instantly.
-    ``bytes_written`` counts every byte that entered the tier via
+    ``written_bytes`` counts every byte that entered the tier via
     ``put`` (write-traffic accounting — under a half-duplex topology
     these writes share the read direction's bandwidth budget).
 
@@ -71,7 +71,7 @@ class Tier:
         self.spec = spec
         self.name = spec.name if name is None else name
         self.used_bytes = 0
-        self.bytes_written = 0
+        self.written_bytes = 0
         self._meta: Dict[str, Dict[str, Any]] = {}
 
     @property
@@ -85,11 +85,11 @@ class Tier:
         return self.identity[1]
 
     # -- delay model --------------------------------------------------------
-    def load_delay(self, nbytes: int) -> float:
-        return self.spec.latency_s + nbytes / self.spec.read_bw
+    def load_delay_s(self, nbytes: int) -> float:
+        return self.spec.latency_s + nbytes / self.spec.read_bps
 
-    def store_delay(self, nbytes: int) -> float:
-        return self.spec.latency_s + nbytes / self.spec.write_bw
+    def store_delay_s(self, nbytes: int) -> float:
+        return self.spec.latency_s + nbytes / self.spec.write_bps
 
     # -- inventory ----------------------------------------------------------
     def has(self, key: str) -> bool:
@@ -126,7 +126,7 @@ class DRAMTier(Tier):
         self._meta[key] = {"nbytes": nb, "method": entry.method,
                            "rate": entry.rate}
         self.used_bytes += nb
-        self.bytes_written += nb
+        self.written_bytes += nb
         return nb
 
     def get(self, key: str) -> CompressedEntry:
@@ -213,12 +213,14 @@ class SSDTier(Tier):
                            "disk_bytes": len(framed) + 4 + _HEADER.size,
                            "path": path}
         self.used_bytes += nb
-        self.bytes_written += nb
+        self.written_bytes += nb
         return nb
 
     def get(self, key: str) -> CompressedEntry:
         info = self._meta[key]
-        t0 = time.perf_counter()
+        # measure=True times REAL host I/O (calibration aid), not
+        # simulated time  # simcheck: ignore[wallclock]
+        t0 = time.perf_counter()  # simcheck: ignore[wallclock]
         with open(info["path"], "rb") as f:
             assert f.read(4) == _MAGIC, f"corrupt frame for {key}"
             codec, crc, orig_len = _HEADER.unpack(f.read(_HEADER.size))
@@ -228,7 +230,8 @@ class SSDTier(Tier):
         entry = CompressedEntry.frombytes(raw, info["method"], info["rate"],
                                           info["meta"])
         if self.measure:
-            info["last_read_s"] = time.perf_counter() - t0
+            info["last_read_s"] = (time.perf_counter()  # simcheck: ignore[wallclock]
+                                   - t0)
         return entry
 
     def evict(self, key: str) -> None:

@@ -57,7 +57,7 @@ class StorageTopology:
 
     Contract: the topology is immutable (frozen dataclass) and purely
     descriptive — it books no time and owns no bytes. Bandwidths are
-    BYTES/SECOND, latencies SECONDS, ``cross_delay`` returns seconds for
+    BYTES/SECOND, latencies SECONDS, ``cross_delay_s`` returns seconds for
     a stored-byte count; naming/identity helpers are total functions
     over the tier names they themselves generate and raise ValueError
     on anything else.
@@ -129,7 +129,7 @@ class StorageTopology:
         return owner is None or replica is None or owner == replica
 
     # -- cross-replica pricing ---------------------------------------------
-    def cross_delay(self, nbytes: int) -> float:
+    def cross_delay_s(self, nbytes: int) -> float:
         """Delay of copying an entry from a sibling replica's DRAM."""
         return self.xlink_latency_s + nbytes / self.xlink_bps
 

@@ -1,0 +1,11 @@
+"""Golden positive for ``ambient-random``: module-level RNG state."""
+import random
+
+import numpy as np
+
+
+def jitter():
+    a = random.random()            # EXPECT: ambient-random
+    b = np.random.rand(3)          # EXPECT: ambient-random
+    random.seed(0)                 # EXPECT: ambient-random
+    return a, b

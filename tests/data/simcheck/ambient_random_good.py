@@ -1,0 +1,10 @@
+"""Golden negative for ``ambient-random``: seeded generator objects."""
+import random
+
+import numpy as np
+
+
+def jitter(seed):
+    rng = random.Random(seed)
+    nprng = np.random.default_rng(seed)
+    return rng.random() + float(nprng.uniform())

@@ -1,0 +1,19 @@
+"""Golden positive for ``det-iter``: unordered iteration on an
+event-scheduling path (direct and transitive)."""
+
+
+def schedule_all(loop, pending, now_s):
+    for key, ev in pending.items():        # EXPECT: det-iter
+        loop.push(now_s, 0, (key, ev))
+
+
+def stage(loop, keys, now_s):
+    hot = set(keys)
+    for k in hot:                          # EXPECT: det-iter
+        loop.push(now_s, 1, k)
+
+
+def indirect(loop, table, now_s):
+    # not a direct scheduler, but calls one -> still an event path
+    for key in table.keys():               # EXPECT: det-iter
+        stage(loop, [key], now_s)

@@ -1,0 +1,12 @@
+"""Golden negative for ``det-iter``: sorted() pins the order; functions
+off the event path iterate freely."""
+
+
+def schedule_all(loop, pending, now_s):
+    for key, ev in sorted(pending.items()):
+        loop.push(now_s, 0, (key, ev))
+
+
+def tally(counters):
+    # no push/book in reach: hash order cannot perturb the schedule
+    return {k: v for k, v in counters.items()}

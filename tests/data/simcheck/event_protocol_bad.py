@@ -1,0 +1,20 @@
+"""Golden positive for ``event-protocol``: an orphan event kind (never
+pushed / handled / named) and a write-channel booking with no
+completion event."""
+
+EV_PING = 0
+EV_ORPHAN = 1                              # EXPECT: event-protocol
+
+EVENT_NAMES = {EV_PING: "ping"}
+
+
+def run(loop):
+    loop.push(0.0, EV_PING, None)
+    while loop:
+        now_s, kind, payload = loop.pop()
+        if kind == EV_PING:
+            pass
+
+
+def store(wchannels, tier, now_s):
+    wchannels[tier].book_service(now_s, 1.0)   # EXPECT: event-protocol

@@ -1,0 +1,17 @@
+"""Golden negative for ``event-protocol``: every kind is pushed,
+handled, and named; the write booking pushes its completion."""
+
+EV_PING = 0
+EV_WRITE_DONE = 1
+
+EVENT_NAMES = {EV_PING: "ping", EV_WRITE_DONE: "write_done"}
+
+
+def run(loop, wchannels, tier):
+    loop.push(0.0, EV_PING, None)
+    start_s, done_s = wchannels[tier].book_service(0.0, 1.0)
+    loop.push(done_s, EV_WRITE_DONE, None)
+    while loop:
+        now_s, kind, payload = loop.pop()
+        if kind in (EV_PING, EV_WRITE_DONE):
+            pass

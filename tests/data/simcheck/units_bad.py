@@ -1,0 +1,8 @@
+"""Golden positive for the ``units`` rule: quantity-stemmed names with
+no unit suffix (function name, parameter, assignment target)."""
+
+
+def load_delay(cooldown):          # EXPECT: units
+    read_bw = 1e9                  # EXPECT: units
+    wait = 0.5                     # EXPECT: units
+    return cooldown * read_bw + wait

@@ -1,0 +1,7 @@
+"""Golden negative for ``units``: same shapes, suffixed correctly."""
+
+
+def load_delay_s(nbytes, read_bps):
+    wait_s = 0.5
+    ratio_per_page = 2.0           # _per_ names are self-describing
+    return nbytes / read_bps + wait_s * ratio_per_page

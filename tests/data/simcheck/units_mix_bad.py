@@ -1,0 +1,9 @@
+"""Golden positive for ``units-mix``: add/compare/divide across
+incompatible unit suffixes."""
+
+
+def mixups(total_delay_s, nbytes):
+    t = total_delay_s + nbytes         # EXPECT: units-mix
+    if total_delay_s > nbytes:         # EXPECT: units-mix
+        return total_delay_s / nbytes  # EXPECT: units-mix
+    return t

@@ -1,0 +1,9 @@
+"""Golden negative for ``units-mix``: same-unit arithmetic and the
+converter whitelist (bytes / bps -> seconds, bytes / s -> bps)."""
+
+
+def conversions(total_delay_s, queue_delay_s, nbytes, read_bps):
+    both_s = total_delay_s + queue_delay_s
+    xfer_s = nbytes / read_bps
+    eff_bps = nbytes / both_s
+    return xfer_s, eff_bps

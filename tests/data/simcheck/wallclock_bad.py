@@ -1,0 +1,11 @@
+"""Golden positive for ``wallclock``: ambient host-time reads inside
+simulation code."""
+import time
+from datetime import datetime
+
+
+def stamp():
+    t0 = time.time()               # EXPECT: wallclock
+    t1 = time.monotonic()          # EXPECT: wallclock
+    day = datetime.now()           # EXPECT: wallclock
+    return t0, t1, day

@@ -1,0 +1,7 @@
+"""Golden negative for ``wallclock``: time comes from the injected
+simulated clock, never the host."""
+
+
+def stamp(clock):
+    now_s = clock()
+    return now_s

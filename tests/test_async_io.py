@@ -126,7 +126,7 @@ def test_byte_conservation_across_queued_transfers(runner, contexts,
         for m in metas:
             assert tier.has(m.key)
         assert len(tier) == len(metas)
-        assert tier.bytes_written >= tier.used_bytes
+        assert tier.written_bytes >= tier.used_bytes
     # no key is resident in two tiers at once
     for key, m in ctrl.meta.items():
         residents = [t for t in ctrl.tiers.values() if t.has(key)]

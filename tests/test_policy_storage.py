@@ -153,7 +153,7 @@ def test_pick_move_frees_bytes_or_none(tmp_path):
             move = pol.pick_move(tname, entries, clock[0],
                                  kv_lookup=c.executor.proxies.get)
             if entries:
-                assert move is None or (move.bytes_freed > 0
+                assert move is None or (move.freed_bytes > 0
                                         and move.tier == tname)
             else:
                 assert move is None

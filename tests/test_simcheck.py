@@ -1,0 +1,222 @@
+"""simcheck tooling: golden files per static rule, the EventLoop
+past-time guard, SimSanitizer fault injections, and the tier-1 gate
+that keeps src/repro clean under the checked-in baseline."""
+import heapq
+import re
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:          # tools/ is a repo-root package
+    sys.path.insert(0, str(ROOT))
+
+from tools.simcheck import analyze, analyze_with_baseline  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.serving.baselines import build_engine  # noqa: E402
+from repro.serving.runner import ModelRunner  # noqa: E402
+from repro.serving.sanitizer import SanitizerError, SimSanitizer  # noqa: E402
+from repro.serving.scheduler import (  # noqa: E402
+    EV_TICK, EVENT_NAMES, EventLoop,
+)
+from repro.serving.workload import (  # noqa: E402
+    make_contexts, round_robin_requests,
+)
+
+FULL = "adaptcache-8b"
+N_ACTIVE = 8_030_000_000
+
+GOLDEN_DIR = Path(__file__).parent / "data" / "simcheck"
+_EXPECT = re.compile(r"#\s*EXPECT:\s*([a-z\-]+)")
+
+
+# -- static rules: golden files ---------------------------------------------
+
+def _expected(path: Path):
+    out = set()
+    for i, line in enumerate(path.read_text().splitlines(), start=1):
+        m = _EXPECT.search(line)
+        if m:
+            out.add((i, m.group(1)))
+    return out
+
+
+@pytest.mark.parametrize(
+    "name", sorted(p.name for p in GOLDEN_DIR.glob("*.py")))
+def test_golden_file(name):
+    """Each golden snippet flags exactly its ``# EXPECT: <rule>`` lines
+    (positives) or nothing at all (negatives)."""
+    path = GOLDEN_DIR / name
+    got = {(f.line, f.rule) for f in analyze(str(path))}
+    want = _expected(path)
+    assert got == want, (
+        f"{name}: analyzer found {sorted(got)}, golden expects "
+        f"{sorted(want)}")
+
+
+def test_golden_covers_every_rule():
+    rules = set()
+    for p in GOLDEN_DIR.glob("*_bad.py"):
+        rules |= {r for _, r in _expected(p)}
+    assert rules == {"units", "units-mix", "wallclock", "ambient-random",
+                     "det-iter", "event-protocol"}
+
+
+def test_src_tree_respects_baseline():
+    """Tier-1 gate: the shipped tree has zero unsuppressed findings and
+    the baseline never covers serving/storage/core."""
+    findings, strict_entries, stale = analyze_with_baseline(
+        str(ROOT / "src" / "repro"))
+    assert not strict_entries, (
+        f"baseline entries point into strict dirs: {strict_entries}")
+    assert not findings, "\n".join(f.render() for f in findings)
+
+
+# -- EventLoop guard ---------------------------------------------------------
+
+def test_push_past_time_raises():
+    loop = EventLoop()
+    loop.push(1.0, EV_TICK)
+    loop.pop()
+    assert loop.now == 1.0
+    with pytest.raises(ValueError, match="tick"):
+        loop.push(0.5, EV_TICK)
+    loop.push(1.0, EV_TICK)                # scheduling AT now is fine
+
+
+# -- SimSanitizer fault injections ------------------------------------------
+
+class _FakeTier:
+    def __init__(self, entries):
+        self._e = dict(entries)
+        self.used_bytes = sum(self._e.values())
+
+    def keys(self):
+        return self._e.keys()
+
+    def entry_nbytes(self, key):
+        return self._e[key]
+
+
+class _FakeMeta:
+    def __init__(self, tier, nbytes):
+        self.tier, self.nbytes = tier, nbytes
+
+
+class _FakeController:
+    def __init__(self, tiers, meta):
+        self.tiers, self.meta = tiers, meta
+
+
+class _FakeTransfer:
+    def __init__(self, key):
+        self.key, self.kind, self.dst_tier = key, "insert", "dram"
+
+
+def _consistent_controller():
+    return _FakeController(tiers={"dram": _FakeTier({"k0": 128})},
+                           meta={"k0": _FakeMeta("dram", 128)})
+
+
+def test_sanitizer_catches_tier_byte_leak():
+    ctrl = _consistent_controller()
+    san = SimSanitizer(ctrl, EVENT_NAMES)
+    san.after_event(1.0, EV_TICK)          # consistent state passes
+    ctrl.tiers["dram"].used_bytes += 64    # inject the leak
+    with pytest.raises(SanitizerError, match="tick.*'dram'.*byte leak"):
+        san.after_event(2.0, EV_TICK)
+
+
+def test_sanitizer_catches_past_time_event():
+    loop = EventLoop()
+    san = SimSanitizer(_consistent_controller(), EVENT_NAMES)
+    loop.sanitizer = san
+    loop.push(5.0, EV_TICK)
+    loop.pop()                             # clock at 5.0
+    # bypass the push guard: inject a raw past-time heap record
+    heapq.heappush(loop._heap, (3.0, EV_TICK, 0, None))
+    with pytest.raises(SanitizerError,
+                       match="'tick'.*before current sim time"):
+        loop.pop()
+
+
+def test_sanitizer_catches_unfenced_read():
+    san = SimSanitizer(_consistent_controller(), EVENT_NAMES)
+    san.note_write("ctx7", 5.0)
+    san.note_read("ctx7", 6.0)             # starts after the fence: ok
+    with pytest.raises(SanitizerError, match="'ctx7'.*unfenced"):
+        san.note_read("ctx7", 3.0)
+
+
+def test_sanitizer_catches_transfer_leak():
+    san = SimSanitizer(_consistent_controller(), EVENT_NAMES)
+    tr = _FakeTransfer("ctx9")
+    san.note_transfer_booked(tr, 2.0)
+    with pytest.raises(SanitizerError, match="never completed.*ctx9"):
+        san.finish(10.0)
+    balanced = SimSanitizer(_consistent_controller(), EVENT_NAMES)
+    balanced.note_transfer_booked(tr, 2.0)
+    balanced.note_transfer_done(tr, 2.0)
+    balanced.finish(10.0)                  # no leak: passes
+
+
+def test_sanitizer_catches_meta_tier_divergence():
+    ctrl = _consistent_controller()
+    san = SimSanitizer(ctrl, EVENT_NAMES)
+    ctrl.meta["k0"].tier = "ssd"           # controller thinks it moved
+    with pytest.raises(SanitizerError):
+        san.after_event(1.0, EV_TICK)
+
+
+# -- sanitized end-to-end run -----------------------------------------------
+
+@pytest.fixture(scope="module")
+def runner():
+    cfg = get_config(FULL, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return ModelRunner(model, params, capacity=256)
+
+
+@pytest.fixture(scope="module")
+def contexts(runner):
+    rng = np.random.RandomState(3)
+    return make_contexts(rng, runner.model.cfg.vocab_size, 2, min_len=64,
+                         max_len=96, n_probes=2)
+
+
+def test_sanitized_run_bit_identical(runner, contexts):
+    """The sanitizer is read-only: a sanitized replay reproduces the
+    unsanitized timings exactly, checks every event, and finds nothing
+    to object to."""
+    full = get_config(FULL)
+    reqs = round_robin_requests(contexts, 8, 0.02, max_new_tokens=4)
+    outs = []
+    for sanitize in (False, True):
+        rig = build_engine(runner, contexts, full, N_ACTIVE,
+                           policy=("none", 1.0), dram_entries=1.5,
+                           ssd_entries=8.0, sanitize=sanitize)
+        res = rig.engine.process(reqs, skip_quality=True)
+        outs.append([(r.req_id, r.ttft_s, r.queue_s, r.load_s,
+                      r.prefill_s, r.hit_tier) for r in res])
+    assert outs[0] == outs[1]
+    san = rig.engine.last_sanitizer
+    assert san is not None and san.events_checked > 0
+    assert san.violations == 0
+
+
+def test_simcheck_env_enables(runner, contexts, monkeypatch):
+    full = get_config(FULL)
+    monkeypatch.setenv("SIMCHECK", "1")
+    rig = build_engine(runner, contexts, full, N_ACTIVE,
+                       policy=("none", 1.0))
+    assert rig.engine.sanitize
+    monkeypatch.setenv("SIMCHECK", "0")
+    rig = build_engine(runner, contexts, full, N_ACTIVE,
+                       policy=("none", 1.0))
+    assert not rig.engine.sanitize

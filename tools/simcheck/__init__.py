@@ -1,0 +1,45 @@
+"""simcheck: repo-native static analysis for the event-driven serving
+simulator (see docs/analysis.md and ``python -m tools.simcheck -h``).
+
+Static passes (stdlib ``ast`` only):
+
+  units           unit-suffix discipline for numeric names
+  units-mix       no arithmetic across incompatible unit suffixes
+  wallclock       no host-time sources in sim modules
+  ambient-random  no module-level RNG calls
+  event-protocol  every EV_* emitted + handled; write bookings complete
+  det-iter        dict/set iteration on event paths goes through sorted()
+
+The runtime half (``repro.serving.sanitizer.SimSanitizer``) lives in
+the simulator package itself so ``ServingEngine(sanitize=True)`` needs
+no dependency on ``tools/``.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from tools.simcheck import ambient, events, order, units  # noqa: F401  (rule registration)
+from tools.simcheck.base import (  # noqa: F401
+    FILE_RULES, GLOBAL_RULES, Finding, SourceFile, discover, is_strict,
+    run_rules,
+)
+from tools.simcheck.baseline import (  # noqa: F401
+    DEFAULT_BASELINE, apply_baseline, load_baseline, write_baseline,
+)
+
+ALL_RULES = sorted(set(FILE_RULES) | set(GLOBAL_RULES))
+
+
+def analyze(root: str) -> List[Finding]:
+    """Run every registered rule over ``root``; pragma-filtered,
+    baseline NOT applied."""
+    return run_rules(discover(root))
+
+
+def analyze_with_baseline(root: str, baseline_path: Optional[str] = None,
+                          ) -> Tuple[List[Finding], List[str], List[str]]:
+    """(unsuppressed findings, strict baseline entries, stale entries)
+    — the CLI's and the tier-1 test's entry point."""
+    findings = analyze(root)
+    baseline = load_baseline(baseline_path or DEFAULT_BASELINE)
+    return apply_baseline(findings, baseline)

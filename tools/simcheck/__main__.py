@@ -1,0 +1,74 @@
+"""CLI: ``python -m tools.simcheck [roots...]``.
+
+Exit 0 when every finding is fixed, pragma'd, or baselined (non-strict
+dirs only); exit 1 otherwise. The checked-in baseline
+(``tools/simcheck/baseline.txt``) is applied by default so the plain
+invocation and the CI invocation agree; ``--no-baseline`` shows the
+raw findings.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.simcheck import (
+    ALL_RULES, analyze, apply_baseline, is_strict, load_baseline,
+    write_baseline,
+)
+from tools.simcheck.baseline import DEFAULT_BASELINE
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.simcheck",
+        description="static invariant analysis for the serving simulator "
+                    f"(rules: {', '.join(ALL_RULES)})")
+    ap.add_argument("roots", nargs="*", default=["src/repro"],
+                    help="directories/files to scan (default: src/repro)")
+    ap.add_argument("--baseline", nargs="?", const=DEFAULT_BASELINE,
+                    default=DEFAULT_BASELINE, metavar="PATH",
+                    help="baseline file to apply (default: "
+                         "tools/simcheck/baseline.txt)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline; report raw findings")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline from current NON-STRICT "
+                         "findings (strict-dir findings are never "
+                         "baselined) and exit")
+    args = ap.parse_args(argv)
+
+    findings = []
+    for root in args.roots:
+        findings.extend(analyze(root))
+
+    if args.write_baseline:
+        keys = write_baseline(args.baseline, findings)
+        strict = [f for f in findings if is_strict(f.path)]
+        print(f"wrote {len(keys)} baseline entries to {args.baseline}")
+        for f in strict:
+            print(f"NOT baselined (strict dir): {f.render()}")
+        return 1 if strict else 0
+
+    baseline = ([] if args.no_baseline
+                else load_baseline(args.baseline))
+    kept, strict_entries, stale = apply_baseline(findings, baseline)
+
+    status = 0
+    for key in strict_entries:
+        print(f"baseline error: entry '{key}' points into a strict dir "
+              f"(serving/storage/core must stay at zero)")
+        status = 1
+    for key in stale:
+        print(f"baseline warning: stale entry '{key}' (finding no "
+              f"longer present — remove it)")
+    for f in kept:
+        print(f.render())
+        status = 1
+    n_suppressed = len(findings) - len(kept)
+    print(f"simcheck: {len(kept)} finding(s), {n_suppressed} baselined, "
+          f"{len(stale)} stale baseline entr{'y' if len(stale) == 1 else 'ies'}")
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,95 @@
+"""Wall-clock & ambient-randomness ban.
+
+``wallclock``       — references to host-time sources (``time.time``,
+                      ``time.monotonic``, ``time.perf_counter``,
+                      ``datetime.now`` / ``utcnow`` / ``today``) are
+                      forbidden in sim modules: simulated time comes
+                      from the event loop via ``SimClock`` only.
+                      References (not just calls) are flagged so a
+                      wall-clock function stored as a default clock is
+                      caught too.
+``ambient-random``  — module-level RNG calls (``random.random()``,
+                      ``np.random.rand()``, ...) draw from ambient
+                      process state and break seeded reproducibility;
+                      only explicitly seeded instances (``Random(seed)``,
+                      ``RandomState(seed)``, ``default_rng(seed)``,
+                      ``jax.random`` keys) are allowed. Constructing a
+                      seeded generator FROM the module (e.g.
+                      ``np.random.RandomState(0)``) is fine.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.simcheck.base import (
+    Finding, SourceFile, enclosing_scopes, file_rule,
+)
+
+_TIME_ATTRS = {"time", "monotonic", "perf_counter", "process_time",
+               "monotonic_ns", "perf_counter_ns", "time_ns"}
+_DATETIME_ATTRS = {"now", "utcnow", "today"}
+#: constructors of explicitly-seeded generators — allowed off the module
+_SEEDED_CTORS = {"Random", "SystemRandom", "RandomState", "default_rng",
+                 "Generator", "SeedSequence", "PRNGKey", "key"}
+
+
+def _root_name(node: ast.AST) -> str:
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+@file_rule("wallclock")
+def check_wallclock(sf: SourceFile) -> List[Finding]:
+    out: List[Finding] = []
+    scopes = enclosing_scopes(sf.tree)
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Attribute):
+            continue
+        base = node.value
+        expr = None
+        if (isinstance(base, ast.Name) and base.id == "time"
+                and node.attr in _TIME_ATTRS):
+            expr = f"time.{node.attr}"
+        elif (node.attr in _DATETIME_ATTRS
+                and _root_name(base) in ("datetime", "date")):
+            expr = f"{_root_name(base)}.{node.attr}"
+        if expr is not None:
+            scope = scopes.get(node, "<module>")
+            out.append(Finding(
+                sf.path, node.lineno, "wallclock", f"{scope}:{expr}",
+                f"wall-clock source '{expr}' in a sim module — use the "
+                f"event loop's simulated time (SimClock) instead"))
+    return out
+
+
+@file_rule("ambient-random")
+def check_ambient_random(sf: SourceFile) -> List[Finding]:
+    out: List[Finding] = []
+    scopes = enclosing_scopes(sf.tree)
+    for node in ast.walk(sf.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)):
+            continue
+        fn = node.func
+        expr = None
+        # random.<fn>(...) on the stdlib module
+        if (isinstance(fn.value, ast.Name) and fn.value.id == "random"
+                and fn.attr not in _SEEDED_CTORS):
+            expr = f"random.{fn.attr}"
+        # np.random.<fn>(...) / numpy.random.<fn>(...) on the module
+        elif (isinstance(fn.value, ast.Attribute)
+                and fn.value.attr == "random"
+                and isinstance(fn.value.value, ast.Name)
+                and fn.value.value.id in ("np", "numpy")
+                and fn.attr not in _SEEDED_CTORS):
+            expr = f"{fn.value.value.id}.random.{fn.attr}"
+        if expr is not None:
+            scope = scopes.get(node, "<module>")
+            out.append(Finding(
+                sf.path, node.lineno, "ambient-random",
+                f"{scope}:{expr}",
+                f"ambient RNG call '{expr}' — draw from an explicitly "
+                f"seeded generator instead"))
+    return out

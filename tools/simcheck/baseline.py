@@ -1,0 +1,68 @@
+"""Baseline file: grandfathered findings outside the strict dirs.
+
+One key per line (``path::rule::symbol`` — name-based, so unrelated
+line-number churn never invalidates entries), ``#`` comments allowed.
+Keys are relative to the canonical scan root (``src/repro``).
+
+Semantics enforced here:
+
+* a finding whose key is in the baseline is suppressed — unless its
+  path is under ``serving/``/``storage/``/``core/``;
+* a baseline entry pointing into a strict dir is itself reported as an
+  error (those dirs must stay at zero findings, fixed or pragma'd);
+* stale entries (no longer matching any finding) are reported as
+  warnings so the file shrinks over time instead of rotting.
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Set, Tuple
+
+from tools.simcheck.base import Finding, is_strict
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.txt")
+
+
+def load_baseline(path: str) -> List[str]:
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path, "r", encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if line and not line.startswith("#"):
+                out.append(line)
+    return out
+
+
+def write_baseline(path: str, findings: List[Finding]) -> List[str]:
+    """Write the non-strict finding keys as the new baseline; strict
+    findings are never written (they must be fixed). Returns the keys
+    written."""
+    keys = sorted({f.key for f in findings if not is_strict(f.path)})
+    with open(path, "w", encoding="utf-8") as f:
+        f.write("# simcheck baseline: grandfathered findings outside "
+                "serving/ storage/ core/\n"
+                "# (key format: path::rule::symbol, relative to "
+                "src/repro; regenerate with --write-baseline)\n")
+        for k in keys:
+            f.write(k + "\n")
+    return keys
+
+
+def apply_baseline(findings: List[Finding], baseline: List[str],
+                   ) -> Tuple[List[Finding], List[str], List[str]]:
+    """Returns (unsuppressed findings, strict baseline entries —
+    errors, stale baseline entries — warnings)."""
+    allowed: Set[str] = set()
+    strict_entries: List[str] = []
+    for key in baseline:
+        path = key.split("::", 1)[0]
+        if is_strict(path):
+            strict_entries.append(key)
+        else:
+            allowed.add(key)
+    live = {f.key for f in findings}
+    stale = sorted(k for k in allowed if k not in live)
+    kept = [f for f in findings if f.key not in allowed]
+    return kept, strict_entries, stale

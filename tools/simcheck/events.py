@@ -1,0 +1,114 @@
+"""Event-protocol completeness (global rule: sees the whole tree).
+
+Every ``EV_*`` constant defined anywhere in the scanned tree must be
+
+  * emitted  — appear as an argument of some ``*.push(...)`` call,
+  * handled  — appear inside some comparison (``kind == EV_X`` /
+               ``kind in (EV_A, EV_B)``),
+  * named    — appear as a key of the ``EVENT_NAMES`` dict when one
+               exists (diagnostics render event kinds through it).
+
+And every write-channel booking site must emit its completion event:
+a function whose own scope books on a ``wchannels[...]`` channel
+(``.book_service`` / ``.book`` / ``.submit``) must also ``push`` an
+``EV_WRITE_DONE`` in that same scope — a booked write that never
+completes leaks the fence (``ready_at``) it set. Source-read bookings
+and compute-channel bookings complete through the events their callers
+chain (load-done / chunk-done / tick), so only the write direction is
+pattern-matched here; the runtime ``SimSanitizer`` covers queued
+``Transfer`` objects end-to-end (leak check at end-of-run).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Set, Tuple
+
+from tools.simcheck.base import (
+    Finding, SourceFile, global_rule, iter_functions, own_nodes,
+)
+
+_EV_RE = re.compile(r"^EV_[A-Z0-9_]+$")
+_BOOK_ATTRS = {"book_service", "book", "submit"}
+
+
+def _ev_names(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node)
+            if isinstance(n, ast.Name) and _EV_RE.match(n.id)}
+
+
+@global_rule("event-protocol")
+def check_event_protocol(files: List[SourceFile]) -> List[Finding]:
+    defined: Dict[str, Tuple[str, int]] = {}
+    pushed: Set[str] = set()
+    handled: Set[str] = set()
+    named: Set[str] = set()
+    have_event_names = False
+    out: List[Finding] = []
+
+    for sf in files:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if (isinstance(tgt, ast.Name)
+                            and _EV_RE.match(tgt.id)
+                            and tgt.id not in defined):
+                        defined[tgt.id] = (sf.path, node.lineno)
+                    if (isinstance(tgt, ast.Name)
+                            and tgt.id == "EVENT_NAMES"
+                            and isinstance(node.value, ast.Dict)):
+                        have_event_names = True
+                        for k in node.value.keys:
+                            if (isinstance(k, ast.Name)
+                                    and _EV_RE.match(k.id)):
+                                named.add(k.id)
+            elif isinstance(node, ast.Call):
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "push"):
+                    for arg in node.args:
+                        pushed |= _ev_names(arg)
+            elif isinstance(node, ast.Compare):
+                handled |= _ev_names(node)
+
+    for ev, (path, line) in sorted(defined.items()):
+        if ev not in pushed:
+            out.append(Finding(
+                path, line, "event-protocol", ev,
+                f"event kind {ev} is defined but never emitted "
+                f"(no *.push(..., {ev}, ...) site)"))
+        if ev not in handled:
+            out.append(Finding(
+                path, line, "event-protocol", ev,
+                f"event kind {ev} is defined but never handled "
+                f"(no comparison against it)"))
+        if have_event_names and ev not in named:
+            out.append(Finding(
+                path, line, "event-protocol", ev,
+                f"event kind {ev} is missing from EVENT_NAMES "
+                f"(diagnostics would render it as a bare int)"))
+
+    # write-channel bookings must push EV_WRITE_DONE in the same scope
+    for sf in files:
+        for qual, fn in iter_functions(sf.tree):
+            book_line = None
+            pushes_write_done = False
+            for node in own_nodes(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr in _BOOK_ATTRS
+                        and any(isinstance(n, ast.Name)
+                                and n.id == "wchannels"
+                                for n in ast.walk(node.func.value))):
+                    book_line = book_line or node.lineno
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "push"
+                        and "EV_WRITE_DONE" in _ev_names(node)):
+                    pushes_write_done = True
+            if book_line is not None and not pushes_write_done:
+                out.append(Finding(
+                    sf.path, book_line, "event-protocol", f"{qual}:wbook",
+                    f"'{qual}' books a write channel but never pushes "
+                    f"EV_WRITE_DONE — the booked transfer has no "
+                    f"completion event"))
+    return out

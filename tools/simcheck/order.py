@@ -1,0 +1,129 @@
+"""Iteration-order determinism on event-scheduling paths.
+
+``det-iter`` — inside an *event-path* function (one that directly or
+transitively schedules simulated work: calls ``*.push`` /
+``*.book`` / ``*.book_service`` / ``*.submit``, or calls another
+event-path function in the same file), iteration must not depend on
+container hash order:
+
+  * looping over ``<x>.items()`` / ``.values()`` / ``.keys()`` (also
+    wrapped in ``list()`` / ``tuple()`` / ``enumerate()``, which
+    preserve the underlying order) must go through ``sorted(...)``;
+  * looping over a local built with ``set()`` / a set literal / a set
+    comprehension must go through ``sorted(...)``.
+
+Python dicts iterate in insertion order, but on a scheduling path that
+order is itself history-dependent state — one insertion reordered by an
+unrelated change silently reorders event timestamps. Sets are worse:
+string hashing is randomized per process (PYTHONHASHSEED), so set
+iteration on a scheduling path breaks run-to-run determinism outright.
+``sorted()`` pins both.
+
+The transitive-call closure is per-file and name-based (good enough for
+the engine's nested-closure style); cross-file event paths are covered
+by the runtime sanitizer instead.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from tools.simcheck.base import (
+    Finding, SourceFile, file_rule, iter_functions, own_nodes,
+)
+
+_SCHEDULE_ATTRS = {"push", "book", "book_service", "submit"}
+_VIEW_ATTRS = {"items", "values", "keys"}
+_ORDER_PRESERVING = {"list", "tuple", "enumerate", "reversed"}
+
+
+def _unwrap(node: ast.AST) -> ast.AST:
+    """Peel order-preserving wrappers; ``sorted(...)`` stops the peel
+    (its result is order-safe)."""
+    while (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+           and node.func.id in _ORDER_PRESERVING and node.args):
+        node = node.args[0]
+    return node
+
+
+def _is_sorted(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id == "sorted")
+
+
+@file_rule("det-iter")
+def check_det_iter(sf: SourceFile) -> List[Finding]:
+    out: List[Finding] = []
+    funcs = iter_functions(sf.tree)
+    by_name: Dict[str, ast.AST] = {fn.name: fn for _, fn in funcs}
+
+    # direct schedulers, then close over same-file calls by bare name
+    event_path: Set[ast.AST] = set()
+    calls: Dict[ast.AST, Set[str]] = {}
+    for _, fn in funcs:
+        names: Set[str] = set()
+        for node in own_nodes(fn):
+            if isinstance(node, ast.Call):
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr in _SCHEDULE_ATTRS):
+                    event_path.add(fn)
+                elif isinstance(node.func, ast.Name):
+                    names.add(node.func.id)
+        calls[fn] = names
+    changed = True
+    while changed:
+        changed = False
+        for _, fn in funcs:
+            if fn in event_path:
+                continue
+            if any(by_name.get(n) in event_path for n in calls[fn]):
+                event_path.add(fn)
+                changed = True
+
+    for qual, fn in funcs:
+        if fn not in event_path:
+            continue
+        # locals assigned an unordered set in this scope
+        set_locals: Set[str] = set()
+        for node in own_nodes(fn):
+            if isinstance(node, ast.Assign) and (
+                    isinstance(node.value, (ast.Set, ast.SetComp))
+                    or (isinstance(node.value, ast.Call)
+                        and isinstance(node.value.func, ast.Name)
+                        and node.value.func.id in ("set", "frozenset"))):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        set_locals.add(tgt.id)
+
+        def check_iter(expr: ast.AST) -> None:
+            if _is_sorted(expr):
+                return
+            inner = _unwrap(expr)
+            if _is_sorted(inner):
+                return
+            if (isinstance(inner, ast.Call)
+                    and isinstance(inner.func, ast.Attribute)
+                    and inner.func.attr in _VIEW_ATTRS):
+                out.append(Finding(
+                    sf.path, inner.lineno, "det-iter",
+                    f"{qual}:{inner.func.attr}",
+                    f"'{qual}' iterates a dict {inner.func.attr}() view "
+                    f"on an event-scheduling path — wrap in sorted() to "
+                    f"pin event order"))
+            elif isinstance(inner, ast.Name) and inner.id in set_locals:
+                out.append(Finding(
+                    sf.path, inner.lineno, "det-iter",
+                    f"{qual}:{inner.id}",
+                    f"'{qual}' iterates set '{inner.id}' on an "
+                    f"event-scheduling path — set order is hash-"
+                    f"randomized; wrap in sorted()"))
+
+        for node in own_nodes(fn):
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                check_iter(node.iter)
+            elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                   ast.DictComp, ast.GeneratorExp)):
+                for gen in node.generators:
+                    check_iter(gen.iter)
+    return out

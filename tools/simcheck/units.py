@@ -1,0 +1,162 @@
+"""Units discipline: numeric names carry unit suffixes; arithmetic does
+not mix incompatible units.
+
+``units``      — a name whose stem implies a physical quantity (delay,
+                 latency, bandwidth, byte count, ...) must end with one
+                 of the recognized unit suffixes (``_s``, ``_bytes``,
+                 ``_bps``, ``_hz``, ``_frac``, ``_tokens``). The LAST
+                 suffix wins: ``tokens_reused_frac`` is a fraction, not
+                 a token count. Ratio names (containing ``_per_``) are
+                 self-describing and exempt.
+``units-mix``  — ``+``/``-``/comparison between two names whose unit
+                 suffixes disagree, and ``/`` between united names
+                 outside the converter whitelist (``bytes / bps -> s``,
+                 ``bytes / s -> bps``, same-unit -> fraction, ...).
+                 Only simple name/attribute operands are judged —
+                 nested expressions are left to the reader.
+
+Applied to assignment/augmented-assignment targets, annotated fields
+(dataclass members), function parameters, and function names.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional
+
+from tools.simcheck.base import (
+    Finding, SourceFile, enclosing_scopes, file_rule,
+)
+
+#: recognized unit suffixes, most specific first; a name "has units"
+#: when its lowercase form ends with one of these words.
+_SUFFIX_UNITS = (("_s", "s"), ("bytes", "bytes"), ("bps", "bps"),
+                 ("hz", "hz"), ("frac", "frac"), ("tokens", "tokens"))
+
+#: stems that imply a unit a name must then carry.
+_SECONDS_STEM = re.compile(
+    r"(^|_)(delay|latency|elapsed|duration|wait|cooldown)(s)?(_|$)")
+_BPS_STEM = re.compile(r"(^|_)(bw|bandwidth)(_|$)")
+_HZ_STEM = re.compile(r"(^|_)hz(_|$)")
+_TOKENS_STEM = re.compile(r"(^|_)tokens(_|$)")
+
+#: converter divisions that legally change units: (numerator,
+#: denominator) -> result. Anything else with two distinct units flags.
+_ALLOWED_DIV = {("bytes", "bps"), ("bytes", "s"), ("bytes", "tokens"),
+                ("tokens", "s"), ("s", "hz")}
+
+
+def unit_of(name: str) -> Optional[str]:
+    n = name.lower()
+    for suffix, unit in _SUFFIX_UNITS:
+        if n.endswith(suffix):
+            return unit
+    return None
+
+
+def required_unit(name: str) -> Optional[str]:
+    n = name.lower()
+    if "_per_" in n:
+        return None                    # ratio names are self-describing
+    if "profile" in n:
+        return None                    # names an estimator OBJECT
+        #                                (DelayProfile), not a scalar
+    if _SECONDS_STEM.search(n):
+        return "s"
+    if _BPS_STEM.search(n):
+        return "bps"
+    if "bytes" in n:
+        return "bytes"
+    if _HZ_STEM.search(n):
+        return "hz"
+    if "frac" in n:
+        return "frac"
+    if _TOKENS_STEM.search(n):
+        return "tokens"
+    return None
+
+
+def _name_of(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _check_name(sf: SourceFile, scopes, node: ast.AST, name: str,
+                what: str, out: List[Finding]) -> None:
+    req = required_unit(name)
+    if req is None or unit_of(name) is not None:
+        return
+    scope = scopes.get(node, "<module>")
+    out.append(Finding(
+        sf.path, node.lineno, "units", f"{scope}:{name}",
+        f"{what} '{name}' looks like a quantity in "
+        f"{'seconds' if req == 's' else req} but carries no unit suffix "
+        f"(expected e.g. '{name}_{req}')"))
+
+
+@file_rule("units")
+def check_units(sf: SourceFile) -> List[Finding]:
+    out: List[Finding] = []
+    scopes = enclosing_scopes(sf.tree)
+    for node in ast.walk(sf.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            _check_name(sf, scopes, node, node.name, "function", out)
+            args = node.args
+            for a in (args.posonlyargs + args.args + args.kwonlyargs):
+                _check_name(sf, scopes, a, a.arg, "parameter", out)
+        elif isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                for el in ast.walk(tgt):
+                    nm = _name_of(el)
+                    if nm is not None:
+                        _check_name(sf, scopes, el, nm, "assignment", out)
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+            nm = _name_of(node.target)
+            if nm is not None:
+                _check_name(sf, scopes, node.target, nm, "assignment", out)
+    return out
+
+
+@file_rule("units-mix")
+def check_units_mix(sf: SourceFile) -> List[Finding]:
+    out: List[Finding] = []
+    scopes = enclosing_scopes(sf.tree)
+
+    def units2(a: ast.AST, b: ast.AST):
+        na, nb = _name_of(a), _name_of(b)
+        if na is None or nb is None:
+            return None
+        ua, ub = unit_of(na), unit_of(nb)
+        if ua is None or ub is None:
+            return None
+        return na, ua, nb, ub
+
+    def flag(node: ast.AST, na: str, ua: str, nb: str, ub: str,
+             op: str) -> None:
+        scope = scopes.get(node, "<module>")
+        out.append(Finding(
+            sf.path, node.lineno, "units-mix",
+            f"{scope}:{na}{op}{nb}",
+            f"'{na}' [{ua}] {op} '{nb}' [{ub}] mixes incompatible "
+            f"units"))
+
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.Add, ast.Sub)):
+            got = units2(node.left, node.right)
+            if got and got[1] != got[3]:
+                flag(node, *got, op="+" if isinstance(node.op, ast.Add)
+                     else "-")
+        elif isinstance(node, ast.BinOp) and isinstance(node.op, ast.Div):
+            got = units2(node.left, node.right)
+            if (got and got[1] != got[3]
+                    and (got[1], got[3]) not in _ALLOWED_DIV):
+                flag(node, *got, op="/")
+        elif isinstance(node, ast.Compare) and len(node.ops) == 1:
+            got = units2(node.left, node.comparators[0])
+            if got and got[1] != got[3]:
+                flag(node, *got, op="<>")
+    return out
