@@ -13,6 +13,8 @@
                                caching vs the PR-4 paged path
   fig8_evicpress      —      — per-page lossy compression knapsack vs
                                static-rate baselines (TTFT/quality frontier)
+  fig9_fused          —      — fused-dequant compute-path pricing vs the
+                               profiled decompress+dense double charge
   tab_alpha_hitrate   §3     — DRAM hit rate vs alpha sweep
   estimator_curves    §2     — offline quality-rate profiling
   kernel_bench        —      — Pallas-op microbenches (CSV contract)
@@ -37,8 +39,8 @@ def main() -> None:
     from benchmarks import (estimator_curves, fig1_hitrate,
                             fig2_ttft_quality, fig3_overlap, fig4_prefetch,
                             fig5_topology, fig6_paging, fig7_readahead,
-                            fig8_evicpress, kernel_bench, roofline_bench,
-                            tab_alpha_hitrate)
+                            fig8_evicpress, fig9_fused, kernel_bench,
+                            roofline_bench, tab_alpha_hitrate)
     suites = [
         ("kernel_bench", kernel_bench.main),
         ("roofline_bench", roofline_bench.main),
@@ -54,6 +56,7 @@ def main() -> None:
             ("fig6_paging", fig6_paging.main),
             ("fig7_readahead", fig7_readahead.main),
             ("fig8_evicpress", fig8_evicpress.main),
+            ("fig9_fused", fig9_fused.main),
             ("tab_alpha_hitrate", tab_alpha_hitrate.main),
         ]
     for name, fn in suites:

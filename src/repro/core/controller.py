@@ -105,6 +105,10 @@ class FetchResult:
     # pays the replica-to-replica copy on top of the owner's read path
     remote: bool = False
     xlink_delay_s: float = 0.0
+    # uncompressed footprint of the entry (EntryMeta.orig_bytes): lets
+    # the engine price HBM reads at RESIDENT bytes instead of the dense
+    # footprint when the attention kernel consumes the packed format
+    orig_nbytes: int = 0
 
     @property
     def total_delay_s(self) -> float:
@@ -239,7 +243,7 @@ class AdaptCacheController:
             self.counters["hit_remote"] += 1
         return FetchResult(kv, meta.tier, meta.method, meta.rate,
                            load, dec, meta.nbytes, remote=remote,
-                           xlink_delay_s=xlink)
+                           xlink_delay_s=xlink, orig_nbytes=meta.orig_bytes)
 
     def note_page_run(self, n_hit: int, n_pages: int,
                       run_key: Optional[str] = None,

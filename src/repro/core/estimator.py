@@ -14,8 +14,9 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import json
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -31,10 +32,28 @@ from repro.storage.tier import Tier
 class DelayProfile:
     # decompression throughput (bytes/s of COMPRESSED input) per method
     decompress_bps: Dict[str, float]
+    # Methods whose decode happens inside the attention kernel itself
+    # (kernels/fused_prefill dequantizes packed KV in VREGs): their
+    # standalone decompress pass disappears from the serving path, except
+    # for a measured residual — the calibrated fraction of the dequant
+    # cost the fused kernel still pays over attention on dense KV.
+    # Empty by default so existing profiles price exactly as before.
+    fused_methods: FrozenSet[str] = frozenset()
+    fused_residual_frac: float = 0.0
 
     def decompress_delay_s(self, method: str, nbytes: int) -> float:
         bps = self.decompress_bps.get(method, float("inf"))
-        return nbytes / bps if bps > 0 else 0.0
+        if bps <= 0:
+            return 0.0
+        delay_s = nbytes / bps
+        if method in self.fused_methods:
+            delay_s *= self.fused_residual_frac
+        return delay_s
+
+
+# Methods the fused kernel can consume directly (KIVI-packed uint8 planes).
+# Entropy-coded / zstd-framed formats still need a standalone decode pass.
+FUSED_COMPUTE_METHODS = frozenset({"kivi", "drop_kivi"})
 
 
 # Defaults calibrated to accelerator-side dequant kernels (the fused Pallas
@@ -46,6 +65,42 @@ DEFAULT_DECOMPRESS_BPS = {
     "streaming_llm": float("inf"),      # token dropping: no decode cost
     "drop_kivi": 50e9,
 }
+
+
+@dataclasses.dataclass
+class FusedCalibration:
+    """Measured cost split of the fused kernel vs the two-pass pipeline
+    (``benchmarks/kernel_bench.py`` writes one of these as JSON).
+
+    ``fused_s`` is one fused-kernel call; ``dequant_s`` + ``attn_s`` are
+    the standalone dequantize pass and the attention-on-dense-KV call it
+    replaces. The residual fraction is how much of the dequant cost the
+    fused kernel still pays — ~0 on TPU where dequant rides the HBM
+    stream, close to 1 on the CPU fallback, which dequantizes anyway.
+    """
+    fused_s: float
+    dequant_s: float
+    attn_s: float
+
+    @property
+    def residual_frac(self) -> float:
+        if self.dequant_s <= 0:
+            return 0.0
+        frac = (self.fused_s - self.attn_s) / self.dequant_s
+        return float(np.clip(frac, 0.0, 1.0))
+
+    @property
+    def speedup(self) -> float:
+        """Two-pass time over fused time (>= 1 when fusion wins)."""
+        return (self.dequant_s + self.attn_s) / max(self.fused_s, 1e-12)
+
+
+def load_fused_calibration(path: str) -> FusedCalibration:
+    with open(path) as f:
+        d = json.load(f)
+    return FusedCalibration(fused_s=float(d["fused_s"]),
+                            dequant_s=float(d["dequant_s"]),
+                            attn_s=float(d["attn_s"]))
 
 
 def profile_decompression(methods: Dict[str, CompressionMethod],

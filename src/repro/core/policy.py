@@ -174,6 +174,12 @@ class AdaptivePolicy(BasePolicy):
     def _delay_term_s(self, tier_name: str, method: str, nbytes: int,
                     home_tier: Optional[str] = None) -> float:
         tier = self.tiers[tier_name]
+        # fused compute path feeds back into the knapsack here: when the
+        # DelayProfile marks a method fused (the attention kernel decodes
+        # it in-register), its decompress term shrinks to the calibrated
+        # residual, so compressed-in-DRAM placements get cheaper exactly
+        # where the serving engine prices them cheaper — DRAM effectively
+        # grows by the compression ratio in the MCKP's eyes.
         d = (tier.load_delay_s(nbytes)
              + self.delay_profile.decompress_delay_s(method, nbytes))
         # a sibling replica's DRAM serves the home replica's hits only

@@ -1,0 +1,55 @@
+"""jit'd wrapper: plane-major fused chunk-prefill over a KIVI-packed prefix.
+
+Dispatch mirrors the other kernel packages: the Pallas kernel runs on TPU
+(or under ``REPRO_FORCE_PALLAS=1`` in interpret mode); everywhere else a
+vmapped dequantize-then-attend oracle keeps results identical. The
+serving engine stores packed prefix KV plane-major already, so this
+boundary takes the kernel layout directly.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels.decode_attn.ops import _dequant_cols, _dequant_rows
+from repro.kernels.fused_prefill import kernel as _k
+from repro.kernels.fused_prefill import ref as _r
+
+
+def _use_pallas() -> bool:
+    return (jax.default_backend() == "tpu"
+            or os.environ.get("REPRO_FORCE_PALLAS", "") == "1")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "k_group", "v_group", "tb"))
+def chunk_prefill_planes(q, k_packed, k_scale, k_zero,
+                         v_packed, v_scale, v_zero,
+                         k_chunk, v_chunk, cur_len, *,
+                         bits: int, k_group: int, v_group: int,
+                         tb: int = _k.DEFAULT_TB):
+    """Plane-major fused chunk prefill.
+
+    q / k_chunk / v_chunk: (P, C, hd); packed prefix K/V per plane as in
+    kernel.py; cur_len (P, 1) i32. Returns (P, C, hd) f32: the chunk's
+    attention over [resident prefix; chunk] with causal chunk masking.
+    """
+    if _use_pallas():
+        return _k.fused_chunk_prefill(
+            q, k_packed, k_scale, k_zero, v_packed, v_scale, v_zero,
+            k_chunk, v_chunk, cur_len,
+            bits=bits, k_group=k_group, v_group=v_group, tb=tb,
+            interpret=jax.default_backend() != "tpu")
+
+    # jnp fallback (vmapped oracle, dequantizing per plane)
+    def one(qp, kp, ks, kz, vp, vs, vz, kc, vc, cl):
+        t = vp.shape[0]
+        k = _dequant_rows(kp, ks, kz, bits, k_group, t)
+        v = _dequant_cols(vp, vs, vz, bits, v_group)
+        return _r.chunk_prefill_ref(qp, k, v, kc, vc, cl[0])
+
+    return jax.vmap(one)(q, k_packed, k_scale, k_zero,
+                         v_packed, v_scale, v_zero, k_chunk, v_chunk,
+                         cur_len)

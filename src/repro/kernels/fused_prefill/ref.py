@@ -1,0 +1,48 @@
+"""Pure-jnp oracle: chunk prefill attention over a KIVI-quantized prefix.
+
+One (batch, kv_head) plane of a Sarathi-style prefill chunk: C fresh
+query tokens attend (a) the T-token cached prefix — fully visible, every
+prefix position precedes every chunk position — masked to the valid
+length ``cur_len`` (lossy pages shrink the resident run), and (b) the
+chunk's OWN keys/values under the causal mask. The oracle dequantizes
+the packed prefix fully and runs exact softmax attention over the
+concatenated [prefix; chunk] keys; the Pallas kernel must match it
+without ever materializing the dequantized prefix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kivi.ref import Quantized, dequantize_ref
+
+NEG_INF = -1e30
+
+
+def chunk_prefill_ref(q, k_prefix, v_prefix, k_chunk, v_chunk,
+                      cur_len) -> jax.Array:
+    """q/k_chunk/v_chunk: (C, hd); k_prefix/v_prefix: (T, hd) dense;
+    cur_len: scalar valid-prefix length. Returns (C, hd) f32."""
+    c, hd = q.shape
+    t = k_prefix.shape[0]
+    k = jnp.concatenate([k_prefix, k_chunk], axis=0).astype(jnp.float32)
+    v = jnp.concatenate([v_prefix, v_chunk], axis=0).astype(jnp.float32)
+    scores = (q.astype(jnp.float32) @ k.T) * (hd ** -0.5)    # (C, T+C)
+    kpos = jnp.arange(t + c)
+    qpos = jnp.arange(c)
+    # prefix columns: visible iff resident (kpos < cur_len); chunk
+    # columns: causal within the chunk (kpos - t <= qpos)
+    visible = jnp.where(kpos[None, :] < t,
+                        kpos[None, :] < cur_len,
+                        kpos[None, :] - t <= qpos[:, None])
+    scores = jnp.where(visible, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return p @ v
+
+
+def chunk_prefill_quantized_ref(q, kq: Quantized, vq: Quantized,
+                                k_chunk, v_chunk, cur_len) -> jax.Array:
+    """Dequantize-then-attend pipeline the fused kernel replaces."""
+    k = dequantize_ref(kq)                                   # (T, hd)
+    v = dequantize_ref(vq)
+    return chunk_prefill_ref(q, k, v, k_chunk, v_chunk, cur_len)

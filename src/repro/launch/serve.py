@@ -135,6 +135,17 @@ def main(argv=None) -> int:
                          "tokens) per context so exact repeats are full "
                          "hits instead of re-prefilling the tail "
                          "(requires --paged)")
+    ap.add_argument("--fused-compute", action="store_true",
+                    help="price compressed KV at resident bytes on the "
+                         "compute path: fused-eligible methods (KIVI "
+                         "packing) skip the standalone decompress pass "
+                         "and HBM-bound attention terms read packed "
+                         "bytes (kernels/fused_prefill)")
+    ap.add_argument("--fused-calibration", default="",
+                    help="path to a kernel_bench fused-calibration JSON "
+                         "(experiments/fused_calibration.json); sets the "
+                         "residual decompress fraction from measurement "
+                         "instead of the ideal-fusion default of 0")
     ap.add_argument("--sanitize", action="store_true",
                     help="run the event engine under the SimSanitizer "
                          "runtime invariant checker (byte conservation, "
@@ -171,6 +182,13 @@ def main(argv=None) -> int:
                                duplex_ssd=not args.half_duplex,
                                xlink_bps=args.xlink_gbps * 1e9)
     n_active = build_model(full_cfg).active_param_count()
+    residual_frac = 0.0
+    if args.fused_calibration:
+        from repro.core.estimator import load_fused_calibration
+        cal = load_fused_calibration(args.fused_calibration)
+        residual_frac = cal.residual_frac
+        print(f"fused calibration: speedup {cal.speedup:.2f}x, "
+              f"residual frac {residual_frac:.3f}")
     rig = build_engine(runner, contexts, full_cfg, n_active, policy=policy,
                        alpha=args.alpha, dram_entries=args.dram_entries,
                        ssd_entries=args.ssd_entries,
@@ -185,6 +203,8 @@ def main(argv=None) -> int:
                        readahead_pages=args.readahead_pages,
                        remainder_cache=args.remainder_cache,
                        depth_discount=args.depth_discount,
+                       fused_compute=args.fused_compute,
+                       fused_residual_frac=residual_frac,
                        sanitize=args.sanitize)
     if args.fit_estimator and args.policy == "adaptive":
         fit_quality_estimator(rig, contexts)

@@ -22,7 +22,8 @@ from repro.configs.base import ModelConfig
 from repro.core.compression import default_registry
 from repro.core.controller import AdaptCacheController, SimClock
 from repro.core.estimator import (
-    DEFAULT_DECOMPRESS_BPS, DelayProfile, FrequencyEstimator, QualityEstimator,
+    DEFAULT_DECOMPRESS_BPS, FUSED_COMPUTE_METHODS, DelayProfile,
+    FrequencyEstimator, QualityEstimator,
 )
 from repro.core.policy import AdaptivePolicy, FixedPolicy
 from repro.serving.engine import ServingEngine
@@ -62,6 +63,8 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
                  readahead_pages: int = 0,
                  remainder_cache: bool = False,
                  depth_discount: float = 0.85,
+                 fused_compute: bool = False,
+                 fused_residual_frac: float = 0.0,
                  sanitize: bool = False) -> EngineRig:
     methods = default_registry()
     smoke_cfg = runner.model.cfg
@@ -93,8 +96,16 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
     order = topology.tier_names
 
     freq = FrequencyEstimator(halflife_s=600.0)
-    delay_profile = DelayProfile({m: (bps / scale if np.isfinite(bps) else bps)
-                          for m, bps in DEFAULT_DECOMPRESS_BPS.items()})
+    # fused compute: KIVI-packed methods skip the standalone decompress
+    # pass (the attention kernel dequantizes in VREGs), paying only the
+    # measured residual fraction — kernel_bench calibrates it; 0.0 is
+    # the ideal-fusion default. Off = profiled pricing, bit-identical.
+    delay_profile = DelayProfile(
+        {m: (bps / scale if np.isfinite(bps) else bps)
+         for m, bps in DEFAULT_DECOMPRESS_BPS.items()},
+        fused_methods=(FUSED_COMPUTE_METHODS if fused_compute
+                       else frozenset()),
+        fused_residual_frac=fused_residual_frac)
     qe = quality_est or QualityEstimator()
 
     if policy == "adaptive":
@@ -130,7 +141,8 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
                         prefetch_deadline=prefetch_deadline,
                         page_tokens=page_tokens, chunk_tokens=chunk_tokens,
                         affinity=affinity, readahead_pages=readahead_pages,
-                        remainder_cache=remainder_cache, sanitize=sanitize)
+                        remainder_cache=remainder_cache,
+                        fused_compute=fused_compute, sanitize=sanitize)
     return EngineRig(eng, ctrl, qe, clock)
 
 

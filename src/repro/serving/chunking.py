@@ -153,11 +153,21 @@ class PageFetch:
     xlink_delay_s: float
     decompress_delay_s: float
     load_delay_s: float              # unqueued tier read estimate
+    orig_nbytes: int = 0             # uncompressed footprint (0: unknown)
+    n_tokens: int = 0                # source tokens this piece covers
 
     @property
     def total_delay_s(self) -> float:
         return self.load_delay_s + self.xlink_delay_s \
             + self.decompress_delay_s
+
+    @property
+    def resident_frac(self) -> float:
+        """Stored-over-dense byte ratio of this piece (1.0 when the
+        uncompressed footprint is unknown or the piece is lossless)."""
+        if self.orig_nbytes <= 0:
+            return 1.0
+        return min(1.0, self.nbytes / self.orig_nbytes)
 
 
 @dataclasses.dataclass
@@ -199,6 +209,25 @@ class FetchPlan:
     @property
     def nbytes(self) -> int:
         return sum(p.nbytes for p in self.pages)
+
+    def kv_bytes_frac(self, fused_methods=frozenset()) -> float:
+        """Token-weighted fraction of dense KV bytes the attention kernel
+        actually streams for the matched run.
+
+        Pieces compressed with a fused-eligible method stay packed in HBM
+        (the kernel dequantizes in VREGs), so they cost their RESIDENT
+        bytes; every other piece is dequantized to dense KV before
+        attention and costs full bytes. 1.0 when nothing is fused."""
+        if not self.pages:
+            return 1.0
+        tok_sum = 0
+        weighted = 0.0
+        for p in self.pages:
+            n = p.n_tokens if p.n_tokens > 0 else 1
+            frac = p.resident_frac if p.method in fused_methods else 1.0
+            tok_sum += n
+            weighted += n * frac
+        return weighted / tok_sum if tok_sum else 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -330,11 +359,14 @@ class PagedPrefixCache:
         kv = join_kv([f.kv for _, f in fetched])
         # dropped pages shrink; count ACTUAL kept tokens
         n_tokens = kv["k" if "k" in kv else "ckv"].shape[1]
+        n_page_hits = len(fetched) - (1 if rem_tokens else 0)
         pages = [PageFetch(key, f.tier, f.nbytes, f.method, f.rate, f.kv,
                            f.remote, f.xlink_delay_s, f.decompress_delay_s,
-                           f.load_delay_s)
-                 for key, f in fetched]
-        n_page_hits = len(fetched) - (1 if rem_tokens else 0)
+                           f.load_delay_s, orig_nbytes=f.orig_nbytes,
+                           n_tokens=(rem_tokens
+                                     if (rem_tokens and i == len(fetched) - 1)
+                                     else self.page_tokens))
+                 for i, (key, f) in enumerate(fetched)]
         return FetchPlan(pages, n_page_hits * self.page_tokens + rem_tokens,
                          n_tokens, kv, remainder_tokens=rem_tokens,
                          quality=self._compose_quality(fetched, rem_tokens))

@@ -214,6 +214,11 @@ class _PagedJob:
     #                                  flight (admission fences on them)
     chunks_done: bool = False        # pipelined: final chunk landed
     #                                  before the loads did
+    kv_frac: float = 1.0             # fraction of dense KV bytes the
+    #                                  matched prefix costs per HBM read
+    #                                  (fused compute path; 1.0 = dense)
+    matched_tokens: int = 0          # source tokens the matched run
+    #                                  covers (the kv_frac-priced span)
 
 
 class _Replica(LaneSet):
@@ -262,6 +267,7 @@ class ServingEngine:
                  affinity: bool = False,
                  readahead_pages: int = 0,
                  remainder_cache: bool = False,
+                 fused_compute: bool = False,
                  sanitize: bool = False):
         if n_replicas < 1 or n_lanes < 1:
             raise ValueError("need at least one replica with one lane")
@@ -333,6 +339,14 @@ class ServingEngine:
         self.chunk_tokens = chunk_tokens
         self.chunk_stats = {"chunks_issued": 0, "queue_s": 0.0,
                             "ticks_delayed": 0, "tick_delay_s": 0.0}
+        # fused compute path (kernels/fused_prefill): attention consumes
+        # the packed prefix directly, so fused-eligible matched pieces
+        # price their RESIDENT bytes on the HBM-bound terms of
+        # chunk_prefill_s / decode_step_s. Which methods qualify comes
+        # from the controller's DelayProfile (fused_methods), the same
+        # gate that zeroes their standalone decompress pass. Off = every
+        # read prices dense bytes, bit-identical to the pre-fused engine.
+        self.fused_compute = fused_compute
         # prefix-affinity arrival routing (split-DRAM topologies only)
         self.affinity = affinity
         self._pkeys: Dict[str, List[str]] = {}
@@ -345,6 +359,17 @@ class ServingEngine:
         self.sanitize = (sanitize
                          or os.environ.get("SIMCHECK", "") not in ("", "0"))
         self.last_sanitizer: Optional[SimSanitizer] = None
+
+    def _fetched_kv_frac(self, fetched) -> float:
+        """Decode-read byte fraction for a whole-entry hit: resident
+        over dense bytes when the fused kernel consumes the stored
+        format directly; 1.0 (dense pricing) otherwise."""
+        if (not self.fused_compute
+                or fetched.method
+                not in self.controller.delay_profile.fused_methods
+                or fetched.orig_nbytes <= 0):
+            return 1.0
+        return min(1.0, fetched.nbytes / fetched.orig_nbytes)
 
     def _entry_quality(self, key: str, method: str, rate: float) -> float:
         """Estimator-side quality of one served whole entry — the
@@ -713,7 +738,17 @@ class ServingEngine:
             prefill stream with the monolithic prefill cost."""
             n_new, n_past = job.chunks[job.ci]
             if self.chunk_tokens > 0:
-                svc = self.tm.chunk_prefill_s(n_new, n_past)
+                # fused pricing: the matched span of the past context is
+                # read at resident (packed) bytes; tokens prefilled by
+                # EARLIER chunks of this job are fresh dense KV
+                kvb = None
+                if (self.fused_compute and job.kv_frac < 1.0
+                        and n_past > 0):
+                    m = min(job.matched_tokens, n_past)
+                    dense = self.tm.cfg.kv_bytes_per_token()
+                    kvb = dense * (m * job.kv_frac + (n_past - m)) / n_past
+                svc = self.tm.chunk_prefill_s(n_new, n_past,
+                                              kv_bytes_per_token=kvb)
                 start, end = job.rep.compute_chan.book(now, svc)
                 # interleave counters track the UNIFIED tick only — a
                 # monolithic suffix on the dedicated stream is not a chunk
@@ -752,7 +787,13 @@ class ServingEngine:
                 rec["wb_queue_s"], rec["wb_transfer_s"] = q, x
             rep.inflight.pop(job.req.context_key, None)
             t0 = job.t_load_done if job.t_load_done >= 0 else job.t_dispatch
-            rep.admit(job.lane, job.req, job.kv_final, job.orig_len, now)
+            # lane-level decode pricing: the matched span stays packed,
+            # the fresh suffix is dense — weight over the whole context
+            m = min(job.matched_tokens, job.orig_len)
+            lane_frac = ((m * job.kv_frac + (job.orig_len - m))
+                         / job.orig_len if job.orig_len > 0 else 1.0)
+            rep.admit(job.lane, job.req, job.kv_final, job.orig_len, now,
+                      kv_frac=lane_frac)
             pending[job.req.req_id] = {
                 "queue_s": job.t_dispatch - job.req.arrival_s,
                 "load_s": t0 - job.t_dispatch, "prefill_s": now - t0,
@@ -760,7 +801,8 @@ class ServingEngine:
             note(now, "paged_admit", req_id=job.req.req_id,
                  replica=rep.idx, lane=job.lane)
             for lane, wreq, t_c in job.waiters:
-                rep.admit(lane, wreq, job.kv_final, job.orig_len, now)
+                rep.admit(lane, wreq, job.kv_final, job.orig_len, now,
+                          kv_frac=lane_frac)
                 pending[wreq.req_id] = {
                     "queue_s": t_c - wreq.arrival_s, "load_s": 0.0,
                     "prefill_s": now - t_c, "hit_tier": None,
@@ -897,10 +939,16 @@ class ServingEngine:
                        "composed_quality": plan.quality}
             else:
                 rec = {"hit_tier": None, "method": "none", "rate": 1.0}
+            kv_frac = 1.0
+            if self.fused_compute and plan.n_pages:
+                kv_frac = plan.kv_bytes_frac(
+                    self.controller.delay_profile.fused_methods)
             job = _PagedJob(rep, lane, req, ctx, kv_final, t_ctx, now, rec,
                             make_chunks(suffix, plan.src_tokens),
                             insert_task=(ctx.task_type if suffix > 0
-                                         else None))
+                                         else None),
+                            kv_frac=kv_frac,
+                            matched_tokens=plan.src_tokens)
             served = launch_job(job, plan, now)
             # sequential readahead, dispatch half: stage this run's
             # slow-resident pages (the SSD pages just read — promotions
@@ -949,7 +997,9 @@ class ServingEngine:
                                  "write_wait_s": start - now,
                                  "composed_quality": self._entry_quality(
                                      req.context_key, fetched.method,
-                                     fetched.rate)}))
+                                     fetched.rate),
+                                 "_kv_frac": self._fetched_kv_frac(
+                                     fetched)}))
             elif req.context_key in rep.inflight:
                 ent = rep.inflight[req.context_key]
                 if isinstance(ent, _PagedJob):   # chunked-whole in flight
@@ -1050,10 +1100,12 @@ class ServingEngine:
                                 hit["wb_queue_s"] = q_s
                                 hit["wb_transfer_s"] = x_s
                     timing = {"load_s": 0.0, "prefill_s": now - issue_t}
+                    kv_frac = 1.0
                 else:
                     hit = extra
                     timing = {"load_s": now - issue_t, "prefill_s": 0.0}
-                rep.admit(lane, req, kv, orig_len, now)
+                    kv_frac = hit.pop("_kv_frac", 1.0)
+                rep.admit(lane, req, kv, orig_len, now, kv_frac=kv_frac)
                 pending[req.req_id] = {
                     "queue_s": issue_t - req.arrival_s, **timing, **hit,
                     "replica": rep.idx}
@@ -1141,6 +1193,11 @@ class ServingEngine:
 
             fetched = self.controller.fetch(req.context_key, now=start)
             t = len(ctx.tokens)
+            kvb = None
+            if fetched is not None:
+                frac = self._fetched_kv_frac(fetched)
+                if frac < 1.0:
+                    kvb = self.tm.cfg.kv_bytes_per_token() * frac
             if fetched is None:
                 # MISS: prefill (recomputation) and admit into the hierarchy
                 kv = self._prefill_kv(ctx)
@@ -1158,7 +1215,8 @@ class ServingEngine:
             answer = self.runner.generate_from_kvdata(
                 kv, t, req.question, req.max_new_tokens)
 
-            decode1 = self.tm.decode_step_s(self.decode_batch, t)
+            decode1 = self.tm.decode_step_s(self.decode_batch, t,
+                                            kv_bytes_per_token=kvb)
             # question tokens are teacher-forced decode steps before TTFT
             decode_s = decode1 * (len(req.question) + 1)
             ttft = queue_s + load_s + prefill_s + decode_s

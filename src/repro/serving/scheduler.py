@@ -56,6 +56,10 @@ class SlotState:
     position: int = 0                # next RoPE position
     pending: List[int] = dataclasses.field(default_factory=list)
     generated: List[int] = dataclasses.field(default_factory=list)
+    # fraction of dense KV bytes this lane's context costs per decode
+    # read: < 1.0 when the matched prefix stays packed in HBM and the
+    # fused kernel dequantizes it in VREGs (1.0 = dense pricing)
+    kv_frac: float = 1.0
 
     @property
     def active(self) -> bool:
@@ -154,11 +158,27 @@ class ContinuousBatcher:
         return [i for i, s in enumerate(self.slots) if not s.active]
 
     def admit(self, lane: int, req: Request, kv: KVData, orig_len: int,
-              now: float) -> None:
+              now: float, kv_frac: float = 1.0) -> None:
         n_kept = self._write_lane(lane, kv)
         self.slots[lane] = SlotState(
             req=req, started_s=now, write_slot=n_kept, position=orig_len,
-            pending=list(np.asarray(req.question, np.int64)))
+            pending=list(np.asarray(req.question, np.int64)),
+            kv_frac=kv_frac)
+
+    def _decode_kvb(self, active: List[int]) -> Optional[float]:
+        """Per-token KV-read bytes override for the next decode step:
+        the position-weighted mean of the active lanes' ``kv_frac``
+        applied to the dense per-token footprint. None (use the dense
+        default) when every lane prices dense — the common case, kept
+        bit-identical to the pre-fused path."""
+        if all(self.slots[i].kv_frac >= 1.0 for i in active):
+            return None
+        pos_sum = sum(self.slots[i].position for i in active)
+        if pos_sum <= 0:
+            return None
+        frac = (sum(self.slots[i].position * self.slots[i].kv_frac
+                    for i in active) / pos_sum)
+        return self.tm.cfg.kv_bytes_per_token() * frac
 
     def next_dt(self) -> Optional[float]:
         """Service time the next ``tick`` will charge (None when all
@@ -168,7 +188,9 @@ class ContinuousBatcher:
         if not active:
             return None
         max_ctx = max(self.slots[i].position for i in active)
-        return self.tm.decode_step_s(len(active), max_ctx)
+        return self.tm.decode_step_s(len(active), max_ctx,
+                                     kv_bytes_per_token=self._decode_kvb(
+                                         active))
 
     # -- one decode tick over all active lanes -------------------------------
     def tick(self, now: float) -> Tuple[List[ScheduledResult], float]:
@@ -189,7 +211,9 @@ class ContinuousBatcher:
             jnp.asarray(tokens), jnp.asarray(pos))
 
         max_ctx = max(self.slots[i].position for i in active)
-        dt = self.tm.decode_step_s(len(active), max_ctx)
+        dt = self.tm.decode_step_s(len(active), max_ctx,
+                                   kv_bytes_per_token=self._decode_kvb(
+                                       active))
 
         done: List[ScheduledResult] = []
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
@@ -326,9 +350,9 @@ class LaneSet:
                 + sum(s.active for s in self.batcher.slots))
 
     def admit(self, lane: int, req: Request, kv: KVData, orig_len: int,
-              now: float) -> None:
+              now: float, kv_frac: float = 1.0) -> None:
         self.reserved.discard(lane)
-        self.batcher.admit(lane, req, kv, orig_len, now)
+        self.batcher.admit(lane, req, kv, orig_len, now, kv_frac=kv_frac)
 
     def issue(self, now: float,
               dispatch: Callable[[int, Request, float], None]) -> None:

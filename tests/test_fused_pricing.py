@@ -1,0 +1,219 @@
+"""Compression-aware compute-path pricing: DelayProfile fused gating,
+FetchPlan resident-byte fractions, calibration clamping, the engine's
+fused on/off behavior on a KIVI-compressed workload, and the knobs-off
+degenerate path pinned against the committed fig8 numbers."""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.estimator import (
+    FUSED_COMPUTE_METHODS, DelayProfile, FusedCalibration,
+    load_fused_calibration,
+)
+from repro.models import build_model
+from repro.serving.baselines import build_engine
+from repro.serving.chunking import FetchPlan, PageFetch
+from repro.serving.engine import summarize
+from repro.serving.runner import ModelRunner
+from repro.serving.workload import make_prefix_sharing_contexts
+
+FULL = "adaptcache-8b"
+N_ACTIVE = 8_030_000_000
+
+
+@pytest.fixture(scope="module")
+def runner():
+    cfg = get_config(FULL, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return ModelRunner(model, params, capacity=256)
+
+
+# ---------------------------------------------------------------------------
+# DelayProfile: fused methods pay only the residual fraction
+# ---------------------------------------------------------------------------
+
+def test_delay_profile_fused_gating():
+    prof = DelayProfile({"kivi": 1e9, "zstd": 2e9, "none": float("inf")})
+    # default: no fused methods — full profiled cost
+    assert prof.decompress_delay_s("kivi", 1e9) == 1.0
+    fused = DelayProfile({"kivi": 1e9, "zstd": 2e9},
+                         fused_methods=frozenset({"kivi"}),
+                         fused_residual_frac=0.25)
+    assert fused.decompress_delay_s("kivi", 1e9) == 0.25
+    # non-fusable codecs keep the profiled cost untouched
+    assert fused.decompress_delay_s("zstd", 1e9) == 0.5
+    # unknown methods stay free either way
+    assert fused.decompress_delay_s("mystery", 1e9) == 0.0
+    # kivi-family is fused-eligible, token dropping is not
+    assert "kivi" in FUSED_COMPUTE_METHODS
+    assert "drop_kivi" in FUSED_COMPUTE_METHODS
+    assert "streaming_llm" not in FUSED_COMPUTE_METHODS
+
+
+def test_fused_calibration_residual_clamped(tmp_path):
+    # fused costs less than attention alone -> residual clamps to 0
+    assert FusedCalibration(1.0, 2.0, 3.0).residual_frac == 0.0
+    # fused costs more than dequant+attn -> clamps to 1
+    assert FusedCalibration(9.0, 2.0, 3.0).residual_frac == 1.0
+    mid = FusedCalibration(4.0, 2.0, 3.0)
+    assert mid.residual_frac == pytest.approx(0.5)
+    assert mid.speedup == pytest.approx(5.0 / 4.0)
+    # degenerate dequant measurement never divides by zero
+    assert FusedCalibration(1.0, 0.0, 3.0).residual_frac == 0.0
+    p = tmp_path / "cal.json"
+    p.write_text('{"fused_s": 4.0, "dequant_s": 2.0, "attn_s": 3.0}')
+    assert load_fused_calibration(str(p)).residual_frac \
+        == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# FetchPlan: token-weighted resident-byte fraction
+# ---------------------------------------------------------------------------
+
+def _page(method, nbytes, orig, toks):
+    return PageFetch("k", "dram", nbytes, method, 1.0, {}, False, 0.0,
+                     0.0, 0.0, orig_nbytes=orig, n_tokens=toks)
+
+
+def test_kv_bytes_frac_token_weighted():
+    plan = FetchPlan([_page("kivi", 25, 100, 64),
+                      _page("none", 100, 100, 64)], 128, 128, None)
+    fused = frozenset({"kivi"})
+    # kivi page streams packed bytes (0.25), lossless page dense (1.0)
+    assert plan.kv_bytes_frac(fused) == pytest.approx(0.625)
+    # without fused methods every page prices dense
+    assert plan.kv_bytes_frac() == 1.0
+    # non-fusable compression is dequantized before attention -> dense
+    plan2 = FetchPlan([_page("streaming_llm", 25, 100, 64)], 64, 16, None)
+    assert plan2.kv_bytes_frac(fused) == 1.0
+    # token weighting: a short cheap piece barely moves the mean
+    plan3 = FetchPlan([_page("kivi", 25, 100, 8),
+                       _page("none", 100, 100, 120)], 128, 128, None)
+    assert plan3.kv_bytes_frac(fused) == pytest.approx(
+        (8 * 0.25 + 120 * 1.0) / 128)
+    # empty plan / unknown footprints price dense
+    assert FetchPlan([], 0, 0, None).kv_bytes_frac(fused) == 1.0
+    assert FetchPlan([_page("kivi", 25, 0, 64)], 64, 64,
+                     None).kv_bytes_frac(fused) == 1.0
+
+
+def test_resident_frac_clamped():
+    assert _page("kivi", 25, 100, 64).resident_frac == 0.25
+    assert _page("kivi", 150, 100, 64).resident_frac == 1.0   # never > 1
+    assert _page("kivi", 25, 0, 64).resident_frac == 1.0      # unknown
+
+
+# ---------------------------------------------------------------------------
+# engine: fused pricing on a KIVI page set — faster, same answers
+# ---------------------------------------------------------------------------
+
+def _prefix_contexts(vocab):
+    rng = np.random.RandomState(29)
+    return make_prefix_sharing_contexts(rng, vocab, n_docs=3, n_variants=3,
+                                        prefix_len=128, suffix_len=112,
+                                        n_probes=2)
+
+
+def _requests(contexts, n, gap):
+    from repro.serving.workload import Request
+    cycle = [0, 1, 2, 3, 0, 1, 2, 6, 0, 1, 2, 4]
+    return [Request(i, contexts[cycle[i % len(cycle)]].key,
+                    contexts[cycle[i % len(cycle)]].probes[0],
+                    (i + 1) * gap,
+                    contexts[cycle[i % len(cycle)]].task_type, 4)
+            for i in range(n)]
+
+
+def _run(runner, contexts, reqs, tmp, *, fused, residual=0.0):
+    rig = build_engine(runner, contexts, get_config(FULL), N_ACTIVE,
+                       policy=("kivi", 0.16), dram_entries=2.5,
+                       ssd_entries=50.0, n_lanes=2, ssd_root=str(tmp),
+                       page_tokens=64, chunk_tokens=32,
+                       fused_compute=fused, fused_residual_frac=residual)
+    for c in contexts:
+        rig.engine.paged.insert_context(
+            c.tokens, runner.prefill_entry(c.tokens), c.task_type, now=0.0)
+    return rig, rig.engine.process(reqs, skip_quality=True)
+
+
+def test_engine_fused_pricing_end_to_end(runner, tmp_path):
+    """On an all-KIVI page set, fused pricing must strictly lower mean
+    TTFT (decompress pass gone + packed HBM reads) without touching
+    token content, placements, or hit accounting."""
+    contexts = _prefix_contexts(runner.model.cfg.vocab_size)
+    reqs = _requests(contexts, 16, 0.02)
+    rig_off, res_off = _run(runner, contexts, reqs, tmp_path / "off",
+                            fused=False)
+    rig_on, res_on = _run(runner, contexts, reqs, tmp_path / "on",
+                          fused=True)
+    assert [r.answer for r in res_on] == [r.answer for r in res_off]
+    s_off, s_on = summarize(res_off), summarize(res_on)
+    assert s_on["ttft_mean_s"] < s_off["ttft_mean_s"]
+    assert s_on["hit_rate_dram"] == s_off["hit_rate_dram"]
+    assert s_on["load_mean_s"] <= s_off["load_mean_s"]
+    # the profile carries the gating; off = empty set
+    assert rig_on.controller.delay_profile.fused_methods \
+        == FUSED_COMPUTE_METHODS
+    assert rig_off.controller.delay_profile.fused_methods == frozenset()
+
+
+def test_engine_residual_interpolates(runner, tmp_path):
+    """residual_frac=1 restores the full profiled decompress cost, so
+    fused TTFT approaches (but never exceeds) profiled as the measured
+    residual worsens."""
+    contexts = _prefix_contexts(runner.model.cfg.vocab_size)
+    reqs = _requests(contexts, 12, 0.02)
+    _, res_off = _run(runner, contexts, reqs, tmp_path / "off",
+                      fused=False)
+    _, res_ideal = _run(runner, contexts, reqs, tmp_path / "i",
+                        fused=True, residual=0.0)
+    _, res_worst = _run(runner, contexts, reqs, tmp_path / "w",
+                        fused=True, residual=1.0)
+    t_off = summarize(res_off)["ttft_mean_s"]
+    t_ideal = summarize(res_ideal)["ttft_mean_s"]
+    t_worst = summarize(res_worst)["ttft_mean_s"]
+    assert t_ideal < t_worst <= t_off + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# degenerate path: fused off == committed fig8
+# ---------------------------------------------------------------------------
+
+def test_degenerate_reproduces_committed_fig8(runner):
+    """With fused pricing off, the engine must be bit-for-bit the PR-7
+    path: rebuild fig8's 'adaptive_a0.01' configuration and match the
+    committed experiments/fig8_evicpress.csv row exactly (to the CSV's
+    1e-6 precision)."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    csv = os.path.join(root, "experiments", "fig8_evicpress.csv")
+    if not os.path.exists(csv):
+        pytest.skip("no committed fig8 artifact")
+    sys.path.insert(0, os.path.join(root, "benchmarks"))
+    try:
+        import fig7_readahead as f7
+        import fig8_evicpress as f8
+        from artifacts import load_committed_row
+    finally:
+        sys.path.pop(0)
+
+    rng = np.random.RandomState(23)
+    cfg = get_config(f8.ARCH, smoke=True)
+    contexts = make_prefix_sharing_contexts(
+        rng, cfg.vocab_size, n_docs=3, n_variants=3,
+        prefix_len=f7.PREFIX, suffix_len=f7.SUFFIX, n_probes=2)
+    requests = f7.skewed_requests(contexts, 36, f8.GAP_S, max_new=6)
+    prefills = {c.key: runner.prefill_entry(c.tokens) for c in contexts}
+    s, _ = f8.run_mode(runner, contexts, get_config(f8.ARCH), prefills,
+                       requests, policy="adaptive", alpha=0.01,
+                       label="degen", qe=f8.make_quality_estimator(),
+                       skip_quality=True)
+
+    ref = load_committed_row(csv, "adaptive_a0.01",
+                             "benchmarks/fig8_evicpress.py")
+    for key in f8.CSV_KEYS:
+        assert abs(s[key] - ref[key]) <= 1.5e-6, (key, s[key], ref[key])
