@@ -1,0 +1,285 @@
+"""Heavy-traffic scale benchmark: scan vs indexed placement selection.
+
+Sweeps the cache population (hundreds of prefix-sharing documents ->
+thousands of resident pages) under bursty Zipf-skewed arrivals and runs
+the IDENTICAL workload twice per population: once with the reference
+full-scan selector (``selector="scan"``: every MCKP move re-scores
+every resident entry) and once with the incremental indexed selector
+(``selector="indexed"``, the default: per-tier entry indexes plus
+lazy-invalidation move heaps, amortized O(log N) per move —
+docs/perf.md).
+
+The selectors are decision-identical BY CONSTRUCTION, and this
+benchmark proves it at scale: at every population the two runs must
+produce bit-for-bit equal serving results — per-request TTFT, hit
+tier, method/rate, composed quality and the generated answer tokens —
+while the CSV reports what actually changed: simulator wall-clock
+(warm insert phase + event-loop phase, measured here with
+``time.perf_counter``; ``src/repro`` never reads wall-clock), event
+throughput (``ServingEngine.last_event_count`` / process seconds) and
+the selector's own counters (``entries_scored`` collapses by orders of
+magnitude, ``heap_pushes``/``heap_revalidations`` replace it).
+
+Self-checks:
+  (1) bit-identical serving fingerprints scan vs indexed at EVERY
+      population (runs in --smoke too);
+  (2) full mode only: indexed is >= 5x faster in simulator wall-clock
+      at the largest population;
+  (3) degenerate replays of the committed fig8 'adaptive_a0.01' and
+      fig9 'adaptive_a0.01_fused' rows under the DEFAULT (indexed)
+      selector — the committed frontier artifacts must replay
+      bit-for-bit with the new engine.
+
+    PYTHONPATH=src python benchmarks/fig10_scale.py [--smoke]
+
+Emits experiments/fig10_scale.csv and BENCH_fig10.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import fig7_readahead as f7  # noqa: E402
+import fig8_evicpress as f8  # noqa: E402
+import fig9_fused as f9  # noqa: E402
+from artifacts import load_committed_row  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.serving.baselines import build_engine  # noqa: E402
+from repro.serving.engine import summarize  # noqa: E402
+from repro.serving.runner import ModelRunner  # noqa: E402
+from repro.serving.workload import (  # noqa: E402
+    bursty_requests, make_heavy_traffic_contexts,
+    make_prefix_sharing_contexts)
+
+ARCH = f8.ARCH
+N_ACTIVE = f8.N_ACTIVE
+
+PAGE = 32                   # small pages -> many resident entries
+ALPHA = 0.01
+DEPTH_DISCOUNT = 0.85
+READAHEAD = 2               # exercises the run-registry top-k path
+LANES = 4
+MAX_NEW = 3
+
+#: documents per population step (contexts = 2 variants per doc; the
+#: page population is ~6 entries per doc: 2 shared prefix pages + a
+#: divergent suffix page and sub-page remainder per variant). The scan
+#: run's warm phase is quadratic in the population — THE point of the
+#: benchmark — so the top step is sized to keep the reference run in
+#: minutes, not hours.
+FULL_DOCS = [30, 60, 120]
+SMOKE_DOCS = [8, 20]
+SPEEDUP_FLOOR = 5.0
+
+SELECTORS = ["scan", "indexed"]
+COUNTER_KEYS = ["pick_move_calls", "entries_scored", "heap_pushes",
+                "heap_revalidations", "moves_applied", "crosschecks"]
+METRIC_KEYS = ["ttft_mean_s", "ttft_p90_s", "composed_quality_mean",
+               "hit_rate", "hit_rate_dram", "hit_rate_ssd",
+               "pages_hit_mean", "partial_hit_rate"]
+CSV_KEYS = (["n_contexts", "n_requests", "n_entries", "warm_s",
+             "process_s", "total_s", "events", "events_per_s"]
+            + COUNTER_KEYS + METRIC_KEYS)
+
+
+def make_population(cfg, n_docs: int, smoke: bool):
+    """Contexts + bursty request stream for one population step (the
+    RNG is seeded per step, so every (population, selector) pair sees
+    the identical workload)."""
+    rng = np.random.RandomState(29 + n_docs)
+    contexts = make_heavy_traffic_contexts(
+        rng, cfg.vocab_size, n_docs, n_variants=2,
+        prefix_len=2 * PAGE, suffix_len=PAGE + 16, n_probes=1)
+    n_req = (2 if smoke else 3) * n_docs
+    requests = bursty_requests(rng, contexts, n_req, burst_size=8,
+                               burst_gap_s=0.25, zipf_a=1.3,
+                               max_new_tokens=MAX_NEW)
+    return contexts, requests
+
+
+def fingerprint(results):
+    """Everything placement decisions can influence, per request: the
+    bit-identity contract between the two selectors."""
+    return tuple((r.req_id, r.ttft_s, r.hit_tier, r.method, r.rate,
+                  r.composed_quality, tuple(r.answer))
+                 for r in results)
+
+
+def run_selector(runner, contexts, full, prefills, requests, *,
+                 selector: str, label: str, qe):
+    """One timed run: warm the hierarchy with every context's pages,
+    then serve the bursty stream. Prefill KV is computed by the caller
+    (shared across selectors), so the measured wall-clock is simulator
+    work, not model compute differences."""
+    rig = build_engine(runner, contexts, full, N_ACTIVE,
+                       policy="adaptive", alpha=ALPHA, quality_est=qe,
+                       dram_entries=0.8 * len(contexts) / 2,
+                       ssd_entries=4.0 * len(contexts),
+                       n_lanes=LANES,
+                       ssd_root=tempfile.mkdtemp(prefix=f"f10_{label}_"),
+                       page_tokens=PAGE, readahead_pages=READAHEAD,
+                       remainder_cache=True,
+                       depth_discount=DEPTH_DISCOUNT,
+                       selector=selector)
+    t0 = time.perf_counter()
+    for c in contexts:
+        rig.engine.paged.insert_context(c.tokens, prefills[c.key],
+                                        c.task_type, now=0.0)
+    warm_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = rig.engine.process(requests, skip_quality=True)
+    process_s = time.perf_counter() - t0
+
+    s = summarize(res)
+    events = rig.engine.last_event_count
+    row = {"n_contexts": len(contexts), "n_requests": len(requests),
+           "n_entries": len(rig.controller.meta),
+           "warm_s": warm_s, "process_s": process_s,
+           "total_s": warm_s + process_s, "events": events,
+           "events_per_s": events / process_s if process_s > 0 else 0.0}
+    for k in COUNTER_KEYS:
+        row[k] = rig.controller.selector.stats.get(k, 0)
+    for k in METRIC_KEYS:
+        row[k] = s[k]
+    return row, fingerprint(res)
+
+
+def check_degenerate_fig9(runner, contexts, full, prefills, qe) -> float:
+    """The committed fig9 'adaptive_a0.01_fused' frontier row must
+    replay bit-for-bit under the default (indexed) selector. A missing
+    artifact is a FAILURE, never a silent skip."""
+    ref = load_committed_row("experiments/fig9_fused.csv",
+                             "adaptive_a0.01_fused",
+                             "benchmarks/fig9_fused.py")
+    requests = f7.skewed_requests(contexts, 36, f8.GAP_S, max_new=6)
+    s, _ = f9.run_mode(runner, contexts, full, prefills, requests,
+                       policy="adaptive", alpha=0.01, label="degen9",
+                       qe=qe, fused=True, skip_quality=True)
+    drift = max(abs(s[k] - ref[k]) for k in f8.CSV_KEYS)
+    assert drift <= 1.5e-6, \
+        f"indexed-default engine drifted from committed fig9 row: {drift}"
+    return drift
+
+
+def main(out_csv: str = "experiments/fig10_scale.csv",
+         out_json: str = "BENCH_fig10.json", smoke: bool = False):
+    cfg = get_config(ARCH, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    runner = ModelRunner(model, params, capacity=256)
+    full = get_config(ARCH)
+    qe = f8.make_quality_estimator()
+
+    # untimed warmup: absorb jit compilation (prefill + decode traces
+    # are cached per model instance) so the timed sweep measures
+    # simulator work on both selector runs equally
+    wc, wr = make_population(cfg, 4, smoke=True)
+    wp = {c.key: runner.prefill_entry(c.tokens) for c in wc}
+    for sel in SELECTORS:
+        run_selector(runner, wc, full, wp, wr[:8], selector=sel,
+                     label="warmup", qe=qe)
+
+    docs = SMOKE_DOCS if smoke else FULL_DOCS
+    rows, speedups = [], {}
+    for n_docs in docs:
+        contexts, requests = make_population(cfg, n_docs, smoke)
+        prefills = {c.key: runner.prefill_entry(c.tokens)
+                    for c in contexts}
+        by_sel = {}
+        for sel in SELECTORS:
+            row, fp = run_selector(runner, contexts, full, prefills,
+                                   requests, selector=sel,
+                                   label=f"d{n_docs}_{sel}", qe=qe)
+            by_sel[sel] = (row, fp)
+            rows.append((n_docs, sel, row))
+            print(f"docs={n_docs:4d} {sel:8s} "
+                  f"entries={row['n_entries']:5d} "
+                  f"warm={row['warm_s']:7.2f}s "
+                  f"process={row['process_s']:7.2f}s "
+                  f"ev/s={row['events_per_s']:9.0f} "
+                  f"scored={row['entries_scored']:9d} "
+                  f"pushes={row['heap_pushes']:8d}")
+
+        # the contract: identical decisions -> identical serving. Exact
+        # equality, not drift tolerance — same floats, same answers.
+        scan_row, scan_fp = by_sel["scan"]
+        idx_row, idx_fp = by_sel["indexed"]
+        assert scan_fp == idx_fp, (
+            f"docs={n_docs}: indexed selector changed serving results "
+            f"(first mismatch at request "
+            f"{next(i for i, (a, b) in enumerate(zip(scan_fp, idx_fp)) if a != b)})")
+        for k in METRIC_KEYS + ["moves_applied", "pick_move_calls"]:
+            assert scan_row[k] == idx_row[k], (
+                f"docs={n_docs}: {k} diverged: scan={scan_row[k]} "
+                f"indexed={idx_row[k]}")
+        speedups[n_docs] = scan_row["total_s"] / max(idx_row["total_s"],
+                                                     1e-9)
+        print(f"docs={n_docs:4d} bit-identical "
+              f"({len(scan_fp)} requests), simulator speedup "
+              f"{speedups[n_docs]:.2f}x")
+
+    if not smoke:
+        top = docs[-1]
+        assert speedups[top] >= SPEEDUP_FLOOR, (
+            f"indexed selector speedup {speedups[top]:.2f}x at "
+            f"docs={top} is below the {SPEEDUP_FLOOR}x acceptance floor")
+
+    # degenerate bit-for-bit replays under the DEFAULT selector: the
+    # committed fig8/fig9 frontier rows are the regression pins
+    rng = np.random.RandomState(23)
+    dctx = make_prefix_sharing_contexts(
+        rng, cfg.vocab_size, n_docs=3, n_variants=3,
+        prefix_len=f7.PREFIX, suffix_len=f7.SUFFIX, n_probes=2)
+    dpre = {c.key: runner.prefill_entry(c.tokens) for c in dctx}
+    drift8 = f9.check_degenerate_fig8(runner, dctx, full, dpre, qe)
+    print(f"degenerate check: committed fig8 'adaptive_a0.01' replays "
+          f"under the indexed default (max drift {drift8:.2e})")
+    drift9 = check_degenerate_fig9(runner, dctx, full, dpre, qe)
+    print(f"degenerate check: committed fig9 'adaptive_a0.01_fused' "
+          f"replays under the indexed default (max drift {drift9:.2e})")
+
+    if os.path.dirname(out_csv):
+        os.makedirs(os.path.dirname(out_csv), exist_ok=True)
+    with open(out_csv, "w") as f:
+        f.write("n_docs,selector," + ",".join(CSV_KEYS) + "\n")
+        for n_docs, sel, row in rows:
+            f.write(f"{n_docs},{sel},"
+                    + ",".join(f"{row[k]:.6f}" if isinstance(row[k], float)
+                               else str(row[k]) for k in CSV_KEYS) + "\n")
+    with open(out_json, "w") as f:
+        json.dump({"benchmark": "fig10_scale", "smoke": smoke,
+                   "page_tokens": PAGE, "alpha": ALPHA,
+                   "populations": docs,
+                   "rows": [{"n_docs": d, "selector": sel, **row}
+                            for d, sel, row in rows],
+                   "speedup_by_docs": {str(d): s
+                                       for d, s in speedups.items()},
+                   "speedup_floor": (None if smoke else SPEEDUP_FLOOR),
+                   "degenerate_fig8_drift": drift8,
+                   "degenerate_fig9_drift": drift9},
+                  f, indent=2)
+    print(f"wrote {out_csv} and {out_json}")
+    return speedups
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small populations for the CI benchmark-smoke "
+                         "job: bit-identity and the degenerate replays "
+                         "still assert; the 5x wall-clock floor (a "
+                         "machine-speed property) does not")
+    ap.add_argument("--out-csv", default="experiments/fig10_scale.csv")
+    ap.add_argument("--out-json", default="BENCH_fig10.json")
+    args = ap.parse_args()
+    main(out_csv=args.out_csv, out_json=args.out_json, smoke=args.smoke)

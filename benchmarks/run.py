@@ -15,6 +15,9 @@
                                static-rate baselines (TTFT/quality frontier)
   fig9_fused          —      — fused-dequant compute-path pricing vs the
                                profiled decompress+dense double charge
+  fig10_scale         —      — heavy-traffic population sweep: scan vs
+                               indexed placement selection (bit-identical
+                               serving, simulator wall-clock speedup)
   tab_alpha_hitrate   §3     — DRAM hit rate vs alpha sweep
   estimator_curves    §2     — offline quality-rate profiling
   kernel_bench        —      — Pallas-op microbenches (CSV contract)
@@ -36,7 +39,7 @@ def main() -> None:
     args = ap.parse_args()
 
     os.makedirs("experiments", exist_ok=True)
-    from benchmarks import (estimator_curves, fig1_hitrate,
+    from benchmarks import (estimator_curves, fig1_hitrate, fig10_scale,
                             fig2_ttft_quality, fig3_overlap, fig4_prefetch,
                             fig5_topology, fig6_paging, fig7_readahead,
                             fig8_evicpress, fig9_fused, kernel_bench,
@@ -57,6 +60,7 @@ def main() -> None:
             ("fig7_readahead", fig7_readahead.main),
             ("fig8_evicpress", fig8_evicpress.main),
             ("fig9_fused", fig9_fused.main),
+            ("fig10_scale", fig10_scale.main),
             ("tab_alpha_hitrate", tab_alpha_hitrate.main),
         ]
     for name, fn in suites:

@@ -47,6 +47,7 @@ tier, apply minimal-marginal-utility-drop moves until all tiers fit
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -57,7 +58,8 @@ from repro.core.estimator import (
     RunFrequencyEstimator, redundancy_feature,
 )
 from repro.core.executor import Executor
-from repro.core.policy import AdaptivePolicy, BasePolicy, Placement
+from repro.core.policy import AdaptivePolicy, BasePolicy, Move, Placement
+from repro.core.selector import make_selector
 from repro.storage.tier import Tier
 from repro.storage.topology import StorageTopology
 
@@ -139,7 +141,8 @@ class AdaptCacheController:
                  # standalone (non-engine) use falls back to wall time
                  # by design; serving rigs always wire a SimClock here
                  clock=time.monotonic,  # simcheck: ignore[wallclock]
-                 topology: Optional[StorageTopology] = None):
+                 topology: Optional[StorageTopology] = None,
+                 selector: str = "indexed"):
         self.methods = methods
         self.tiers = tiers
         self.tier_order = list(tier_order)
@@ -175,6 +178,14 @@ class AdaptCacheController:
                          "page_runs_full": 0, "page_runs_partial": 0,
                          "page_runs_miss": 0,
                          **{f"hit_{t}": 0 for t in tier_order}}
+        # placement selection engine: "indexed" (amortized O(log N)
+        # lazy move heaps) or "scan" (the reference full scan) — both
+        # produce identical decisions (see repro.core.selector and
+        # docs/perf.md); fig10 pins the equivalence at scale
+        self.selector = make_selector(selector, self)
+        # optional: callers (tests, the SIMCHECK cross-check harness)
+        # set this to a list to record every applied enforcement Move
+        self.move_log: Optional[List[Move]] = None
 
     # -- public API -----------------------------------------------------------
     def lookup(self, key: str) -> Optional[str]:
@@ -213,6 +224,7 @@ class AdaptCacheController:
         if not self.freq.seen(key):      # keep the EWMA of returning keys
             self.freq.on_insert(key, now)
         self.counters["inserts"] += 1
+        self.selector.touch(key, now)
         if transfers is not None:
             transfers.append(Transfer(key, "insert", meta.tier, meta.nbytes))
         self._enforce(placement.tier, now, transfers=transfers)
@@ -237,6 +249,7 @@ class AdaptCacheController:
         meta.hits += 1
         meta.last_hit = now
         self.freq.on_hit(key, now)
+        self.selector.touch(key, now)
         self.counters["hits"] += 1
         self.counters[f"hit_{meta.tier}"] += 1
         if remote:
@@ -282,20 +295,30 @@ class AdaptCacheController:
         if run_key is not None:
             now = self.clock() if now is None else now
             self.run_freq.note_run(run_key, now)
+            chain: List[str] = []
             if keys is not None:
                 self.page_runs[run_key] = list(keys)
+                chain = list(keys)
                 for k in keys:
                     self.run_of[k] = run_key
                 if rem_key is not None:
                     self.run_of[rem_key] = run_key
-                if len(self.page_runs) > self.max_page_runs:
-                    coldest = min(
-                        self.page_runs,
-                        key=lambda rk: (self.run_freq.predict(rk, now), rk))
-                    self.page_runs.pop(coldest)
-                    self.run_freq.forget(coldest)
-                    self.run_of = {k: rk for k, rk in self.run_of.items()
-                                   if rk != coldest}
+                    chain.append(rem_key)
+            # the run's EWMA advanced (and possibly its chain): every
+            # member page's run-priced score is stale in the selector
+            self.selector.on_run_signal(run_key, chain, now)
+            if keys is not None and len(self.page_runs) > self.max_page_runs:
+                coldest = min(
+                    self.page_runs,
+                    key=lambda rk: (self.run_freq.predict(rk, now), rk))
+                self.page_runs.pop(coldest)
+                self.run_freq.forget(coldest)
+                dropped = sorted(k for k, rk in self.run_of.items()
+                                 if rk == coldest)
+                self.run_of = {k: rk for k, rk in self.run_of.items()
+                               if rk != coldest}
+                # pruned members fall back to per-entry pricing
+                self.selector.on_run_drop(coldest, dropped, now)
 
     # -- speculative prefetch ---------------------------------------------------
     def prefetch_candidates(self, now: Optional[float] = None,
@@ -309,16 +332,21 @@ class AdaptCacheController:
         between replica DRAMs via the prefetcher."""
         now = self.clock() if now is None else now
         if self.topology is not None:
-            slow = [m for m in self.meta.values()
-                    if m.tier is not None
-                    and self.topology.level(m.tier) > 0]
+            slow_tiers = [t for t in self.tier_order
+                          if self.topology.level(t) > 0]
         else:
-            fast = self.tier_order[0]
-            slow = [m for m in self.meta.values()
-                    if m.tier is not None and m.tier != fast]
-        cands = [(self.freq.predict(m.key, now), m.key) for m in slow]
-        return [k for f, k in sorted(cands, key=lambda t: (-t[0], t[1]))
-                if f >= min_hz][:limit]
+            slow_tiers = self.tier_order[1:]
+        # per-tier index instead of the full meta scan; top-k heap
+        # selection instead of a full sort (nsmallest(k, key=...) equals
+        # sorted(key=...)[:k] — documented, stable), and the >= min_hz
+        # filter commutes with selection because it is a prefix of the
+        # (-rate, key) order restricted to qualifying items
+        cands = ((self.freq.predict(m.key, now), m.key)
+                 for t in slow_tiers
+                 for m in self.executor.iter_entries(t))
+        return [k for f, k in heapq.nsmallest(
+            limit, (c for c in cands if c[0] >= min_hz),
+            key=lambda t: (-t[0], t[1]))]
 
     def run_candidates(self, now: Optional[float] = None, limit: int = 8,
                        min_hz: float = 0.0
@@ -330,11 +358,14 @@ class AdaptCacheController:
         they are requested again; ``promote``'s displacement guard still
         arbitrates every individual move."""
         now = self.clock() if now is None else now
-        cands = [(self.run_freq.predict(rk, now), rk)
-                 for rk in self.page_runs]
+        # top-k heap instead of sorting the whole run registry on every
+        # idle readahead walk (same selection: nsmallest == sorted[:k])
+        cands = ((self.run_freq.predict(rk, now), rk)
+                 for rk in self.page_runs)
         return [(rk, self.page_runs[rk])
-                for f, rk in sorted(cands, key=lambda t: (-t[0], t[1]))
-                if f >= min_hz][:limit]
+                for f, rk in heapq.nsmallest(
+                    limit, (c for c in cands if c[0] >= min_hz),
+                    key=lambda t: (-t[0], t[1]))]
 
     def promote(self, key: str, now: Optional[float] = None,
                 transfers: Optional[List[Transfer]] = None,
@@ -367,29 +398,34 @@ class AdaptCacheController:
         if need > 0:
             mine = self.freq.predict(key, now)
             freed = 0
-            candidates = self._entries_in(fast)
-            while freed < need and candidates:
-                move = self.policy.pick_move(
-                    fast, candidates, now,
-                    kv_lookup=self.executor.proxies.get)
-                if move is None:
-                    break
-                victim = self.meta[move.key]
-                if (move.kind != "recompress"
-                        and self.freq.predict(victim.key, now) >= mine):
-                    return None  # would displace an at-least-as-hot entry
-                # a recompression keeps the entry resident (no
-                # displacement to veto); either way count the bytes the
-                # move frees and drop the entry from the hypothetical
-                # tier state — conservative for repeated recompression
-                # (under-counts freeable bytes, never over-approves)
-                freed += (move.freed_bytes if move.kind == "recompress"
-                          else victim.nbytes)
-                candidates = [m for m in candidates if m.key != move.key]
+            # displacement-guard simulation on the selector (per-tier
+            # index / move heaps instead of a full meta scan); close()
+            # restores any cursor state even on early veto returns
+            sim = self.selector.begin_sim(fast, now)
+            try:
+                while freed < need:
+                    move = sim.next_move(now)
+                    if move is None:
+                        break
+                    victim = self.meta[move.key]
+                    if (move.kind != "recompress"
+                            and self.freq.predict(victim.key, now) >= mine):
+                        return None  # would displace an as-hot entry
+                    # a recompression keeps the entry resident (no
+                    # displacement to veto); either way count the bytes
+                    # the move frees and drop the entry from the
+                    # hypothetical tier state — conservative for
+                    # repeated recompression (under-counts freeable
+                    # bytes, never over-approves)
+                    freed += (move.freed_bytes if move.kind == "recompress"
+                              else victim.nbytes)
+            finally:
+                sim.close()
             if freed < need:
                 return None
         src = meta.tier
         nb = self.executor.promote(meta, fast)
+        self.selector.touch(key, now)
         tr = Transfer(key, "promote", fast, nb, src_tier=src, read_nbytes=nb)
         if transfers is not None:
             transfers.append(tr)
@@ -399,7 +435,10 @@ class AdaptCacheController:
 
     # -- capacity enforcement ---------------------------------------------------
     def _entries_in(self, tier_name: str):
-        return [m for m in self.meta.values() if m.tier == tier_name]
+        # per-tier executor index in insertion-seq order: identical to
+        # the old [m for m in meta.values() if m.tier == tier_name] scan
+        # (metas never leave the dict; re-inserts keep their position)
+        return self.executor.entries_in(tier_name)
 
     def _enforce(self, start_tier: str, now: float, max_moves: int = 10000,
                  transfers: Optional[List[Transfer]] = None):
@@ -409,17 +448,16 @@ class AdaptCacheController:
             tname = pending.pop()
             tier = self.tiers[tname]
             while tier.used_bytes > tier.spec.capacity_bytes:
-                entries = self._entries_in(tname)
-                if not entries:
-                    break
-                move = self.policy.pick_move(
-                    tname, entries, now,
-                    kv_lookup=self.executor.proxies.get)
+                move = self.selector.pick_move(tname, now)
                 if move is None:
                     break
                 meta = self.meta[move.key]
                 read_nbytes = meta.nbytes
                 affected = self.executor.apply(move, meta)
+                self.selector.touch(move.key, now)
+                self.selector.stats["moves_applied"] += 1
+                if self.move_log is not None:
+                    self.move_log.append(move)
                 moves += 1
                 if transfers is not None and move.kind != "evict":
                     # evictions free bytes without writing any; demotes
@@ -438,6 +476,10 @@ class AdaptCacheController:
         total = self.counters["hits"] + self.counters["misses"]
         out = dict(self.counters)
         out.update(self.executor.stats)
+        # placement-selector work counters: how much scoring the
+        # selection engine did, in event counts rather than wall-clock
+        for k, v in self.selector.stats.items():
+            out[f"selector_{k}"] = v
         out["lookup_total"] = total
         out["hit_rate"] = self.counters["hits"] / total if total else 0.0
         out["hit_rate_remote"] = (self.counters["hit_remote"] / total

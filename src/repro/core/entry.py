@@ -25,3 +25,8 @@ class EntryMeta:
     # stats
     hits: int = 0
     last_hit: float = 0.0
+    # monotone insertion sequence, assigned by the executor on first
+    # store and stable across re-inserts (the surviving meta keeps its
+    # dict position): heap tie-breaks on it reproduce the reference
+    # scan's first-seen-wins ordering exactly
+    seq: int = -1

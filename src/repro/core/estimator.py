@@ -266,10 +266,17 @@ class FrequencyEstimator:
             + alpha * inst
         self._last[key] = now
 
+    def decay_factor(self, dt_s: float) -> float:
+        """Multiplier ``predict`` applies over an idle span of ``dt_s``
+        seconds. Every key of this estimator shares it, which is what
+        lets the incremental placement selector cache scores normalized
+        to a fixed reference time (see ``repro.core.selector``)."""
+        return 0.5 ** (dt_s / self.halflife)
+
     def predict(self, key: str, now: float) -> float:
         rate = self._rate.get(key, self.prior_hz)
         idle = max(0.0, now - self._last.get(key, now))
-        return rate * 0.5 ** (idle / self.halflife)   # decay while cold
+        return rate * self.decay_factor(idle)         # decay while cold
 
     def forget(self, key: str) -> None:
         self._rate.pop(key, None)

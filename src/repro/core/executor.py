@@ -6,7 +6,8 @@ policy can evaluate candidate states without touching stored bytes.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+import itertools
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -33,16 +34,47 @@ class Executor:
         self.proxies: Dict[str, KVData] = {}
         self.stats = {"recompress": 0, "demote": 0, "evict": 0,
                       "promote": 0, "bytes_moved": 0}
+        # per-tier resident index, maintained on every placement
+        # mutation (store/promote/apply): key -> live EntryMeta. Replaces
+        # the controller's full meta scan for candidate listing, and the
+        # SimSanitizer audits it against meta + tier inventories.
+        self.tier_index: Dict[str, Dict[str, EntryMeta]] = {
+            name: {} for name in tiers}
+        self._seq = itertools.count()
+
+    # -- per-tier index -------------------------------------------------------
+    def _index_move(self, meta: EntryMeta, old_tier: Optional[str]) -> None:
+        if old_tier is not None:
+            self.tier_index.get(old_tier, {}).pop(meta.key, None)
+        if meta.tier is not None:
+            self.tier_index.setdefault(meta.tier, {})[meta.key] = meta
+
+    def entries_in(self, tier_name: str) -> List[EntryMeta]:
+        """Tier residents in insertion-sequence order — exactly the
+        order the reference scan sees them in ``controller.meta`` (metas
+        are never removed from that dict and re-inserts reuse the
+        surviving meta, so seq order equals dict iteration order)."""
+        return sorted(self.tier_index.get(tier_name, {}).values(),
+                      key=lambda m: m.seq)
+
+    def iter_entries(self, tier_name: str) -> List[EntryMeta]:
+        """Tier residents without the seq sort, for rankings that impose
+        their own total order (candidate top-k selection)."""
+        return list(self.tier_index.get(tier_name, {}).values())
 
     # -- store ---------------------------------------------------------------
     def store(self, meta: EntryMeta, kv: KVData, placement: Placement) -> int:
+        if meta.seq < 0:
+            meta.seq = next(self._seq)
         m = self.methods[placement.method]
         entry = m.compress(kv, placement.rate)
         nb = self.tiers[placement.tier].put(meta.key, entry)
+        old_tier = meta.tier
         meta.tier = placement.tier
         meta.method = placement.method
         meta.rate = entry.rate
         meta.nbytes = nb
+        self._index_move(meta, old_tier)
         self.proxies[meta.key] = shape_proxy(self._decompressed_view(entry, m))
         return nb
 
@@ -81,7 +113,9 @@ class Executor:
         entry = src.get(meta.key)
         src.evict(meta.key)
         self.tiers[dst_name].put(meta.key, entry)
+        old_tier = meta.tier
         meta.tier = dst_name
+        self._index_move(meta, old_tier)
         self.stats["promote"] += 1
         self.stats["bytes_moved"] += entry.nbytes
         return entry.nbytes
@@ -92,8 +126,10 @@ class Executor:
         tier = self.tiers[move.tier]
         if move.kind == "evict":
             tier.evict(meta.key)
+            old_tier = meta.tier
             meta.tier = None
             meta.nbytes = 0
+            self._index_move(meta, old_tier)
             self.proxies.pop(meta.key, None)
             self.stats["evict"] += 1
             return None
@@ -106,7 +142,9 @@ class Executor:
             entry = tier.get(meta.key)
             tier.evict(meta.key)
             self.tiers[dst_name].put(meta.key, entry)
+            old_tier = meta.tier
             meta.tier = dst_name
+            self._index_move(meta, old_tier)
             self.stats["demote"] += 1
             self.stats["bytes_moved"] += entry.nbytes
             return meta.tier

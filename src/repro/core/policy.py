@@ -97,7 +97,36 @@ class BasePolicy:
         raise NotImplementedError
 
     def pick_move(self, tier_name: str, entries: Sequence[EntryMeta],
-                  now: float) -> Optional[Move]:
+                  now: float, kv_lookup=None) -> Optional[Move]:
+        raise NotImplementedError
+
+    def pick_move_scan(self, tier_name: str, entries: Sequence[EntryMeta],
+                       now: float, kv_lookup=None) -> Optional[Move]:
+        """Reference full-scan selection. ``AdaptivePolicy``/``FixedPolicy``
+        implement the scan here (``pick_move`` delegates to it); for a
+        custom policy that only overrides ``pick_move`` this default
+        keeps the two names interchangeable."""
+        return self.pick_move(tier_name, entries, now, kv_lookup=kv_lookup)
+
+    # -- incremental-selector hooks (see repro.core.selector) ---------------
+    def entry_best_move(self, tier_name: str, meta: EntryMeta, now: float,
+                        kv_lookup=None) -> Optional[Move]:
+        """The single entry's own minimal-drop move — the inner loop of
+        the scan, exposed so the incremental selector can (re)score one
+        entry in O(ladder) instead of O(tier)."""
+        raise NotImplementedError
+
+    def selector_halflife_s(self, key: str) -> Optional[float]:
+        """Half-life (seconds) of the EWMA whose decay uniformly scales
+        this key's move scores between touches, or None when the
+        selection key is time-invariant (recency LRU). Entries sharing a
+        half-life share one decay factor, so their cached scores stay
+        comparable without rescoring."""
+        raise NotImplementedError
+
+    def selector_recency_key(self, meta: EntryMeta):
+        """Time-invariant ordering key (policies whose
+        ``selector_halflife_s`` is None): smaller selects first."""
         raise NotImplementedError
 
     def next_tier(self, tier_name: str) -> Optional[str]:
@@ -240,49 +269,82 @@ class AdaptivePolicy(BasePolicy):
         return best[1]
 
     # -- capacity enforcement ---------------------------------------------------
+    def entry_best_move(self, tier_name: str, meta: EntryMeta, now: float,
+                        kv_lookup=None) -> Optional[Move]:
+        """One entry's minimal-drop move over its full ladder: the exact
+        arithmetic of the reference scan's inner loop, so the strict-<
+        per-entry best combined across entries (first-seen wins on ties)
+        reproduces the flattened scan move-for-move."""
+        next_tier = self.next_tier(tier_name)
+        u_cur = self.current_utility(meta, now)
+        kv_like = kv_lookup(meta.key) if kv_lookup else None
+        best: Optional[Move] = None
+
+        # (a) recompress in place
+        for mname, rate, nb in self._candidate_states(meta, kv_like):
+            freed = meta.nbytes - nb
+            if freed <= 0:
+                continue
+            u_new = self.utility(meta, tier_name, mname, rate, nb, now)
+            drop = (u_cur - u_new) / freed
+            if best is None or drop < best.drop_per_byte:
+                best = Move(meta.key, "recompress", tier_name, mname,
+                            rate, freed, drop, dst_tier=tier_name)
+
+        # (b) demote to next tier (same state)
+        if next_tier is not None:
+            u_new = self.utility(meta, next_tier, meta.method, meta.rate,
+                                 meta.nbytes, now)
+            drop = (u_cur - u_new) / meta.nbytes
+            if best is None or drop < best.drop_per_byte:
+                best = Move(meta.key, "demote", tier_name, meta.method,
+                            meta.rate, meta.nbytes, drop,
+                            dst_tier=next_tier)
+
+        # (c) evict — the LIMIT POINT of the compression ladder
+        # (EVICPRESS): rate -> 0 keeps zero utility, so eviction is
+        # just the final rung, scored on the SAME drop-per-byte
+        # scale as recompress/demote on EVERY tier. A
+        # negative-utility entry (delay term exceeds alpha*quality)
+        # has negative drop: removing it is a strict improvement and
+        # the greedy takes it before touching anything useful.
+        drop = u_cur / meta.nbytes
+        if best is None or drop < best.drop_per_byte:
+            best = Move(meta.key, "evict", tier_name, meta.method,
+                        meta.rate, meta.nbytes, drop)
+        return best
+
+    def pick_move_scan(self, tier_name: str, entries: Sequence[EntryMeta],
+                       now: float, kv_lookup=None) -> Optional[Move]:
+        """Reference selection: minimal marginal-utility-drop move over a
+        full scan of ``entries`` (strict < keeps the first seen on ties).
+        The incremental selector must match this move-for-move; it stays
+        the ground truth for tests and the SIMCHECK cross-check."""
+        best: Optional[Move] = None
+        for meta in entries:
+            cand = self.entry_best_move(tier_name, meta, now,
+                                        kv_lookup=kv_lookup)
+            if cand is not None and (best is None or
+                                     cand.drop_per_byte < best.drop_per_byte):
+                best = cand
+        return best
+
     def pick_move(self, tier_name: str, entries: Sequence[EntryMeta],
                   now: float, kv_lookup=None) -> Optional[Move]:
         """Minimal marginal-utility-drop move freeing bytes in tier_name."""
-        next_tier = self.next_tier(tier_name)
-        best: Optional[Move] = None
+        return self.pick_move_scan(tier_name, entries, now,
+                                   kv_lookup=kv_lookup)
 
-        for meta in entries:
-            u_cur = self.current_utility(meta, now)
-            kv_like = kv_lookup(meta.key) if kv_lookup else None
-
-            # (a) recompress in place
-            for mname, rate, nb in self._candidate_states(meta, kv_like):
-                freed = meta.nbytes - nb
-                if freed <= 0:
-                    continue
-                u_new = self.utility(meta, tier_name, mname, rate, nb, now)
-                drop = (u_cur - u_new) / freed
-                if best is None or drop < best.drop_per_byte:
-                    best = Move(meta.key, "recompress", tier_name, mname,
-                                rate, freed, drop, dst_tier=tier_name)
-
-            # (b) demote to next tier (same state)
-            if next_tier is not None:
-                u_new = self.utility(meta, next_tier, meta.method, meta.rate,
-                                     meta.nbytes, now)
-                drop = (u_cur - u_new) / meta.nbytes
-                if best is None or drop < best.drop_per_byte:
-                    best = Move(meta.key, "demote", tier_name, meta.method,
-                                meta.rate, meta.nbytes, drop,
-                                dst_tier=next_tier)
-
-            # (c) evict — the LIMIT POINT of the compression ladder
-            # (EVICPRESS): rate -> 0 keeps zero utility, so eviction is
-            # just the final rung, scored on the SAME drop-per-byte
-            # scale as recompress/demote on EVERY tier. A
-            # negative-utility entry (delay term exceeds alpha*quality)
-            # has negative drop: removing it is a strict improvement and
-            # the greedy takes it before touching anything useful.
-            drop = u_cur / meta.nbytes
-            if best is None or drop < best.drop_per_byte:
-                best = Move(meta.key, "evict", tier_name, meta.method,
-                            meta.rate, meta.nbytes, drop)
-        return best
+    def selector_halflife_s(self, key: str) -> Optional[float]:
+        """Scores decay with the EWMA pricing the key RIGHT NOW: the run
+        estimator for pages with a known run, the per-entry estimator
+        otherwise (``_entry_freq``). A change of pricing source always
+        comes with a run signal, which re-touches the affected keys."""
+        if self.run_freq is not None and key.startswith(("pg-", "rem-")):
+            run_key = self.run_lookup(key) if self.run_lookup else None
+            if run_key is not None and self.run_freq.seen(run_key):
+                return self.run_freq.halflife
+        return self.freq.halflife
 
 
 def _page_depth(key: str) -> int:
@@ -331,15 +393,32 @@ class FixedPolicy(BasePolicy):
         tier = self.home_tier(meta) or self.tier_order[0]
         return Placement(tier, method, rate)
 
-    def pick_move(self, tier_name: str, entries: Sequence[EntryMeta],
-                  now: float, kv_lookup=None) -> Optional[Move]:
-        if not entries:
-            return None
-        lru = min(entries, key=lambda e: (e.last_hit or e.created_at,
-                                          -_page_depth(e.key)))
+    def entry_best_move(self, tier_name: str, meta: EntryMeta, now: float,
+                        kv_lookup=None) -> Optional[Move]:
+        """LRU has no per-entry ladder: the move is demote-or-evict at
+        drop 0.0 — the ORDER lives in ``selector_recency_key``."""
         next_tier = self.next_tier(tier_name)
         if next_tier is not None:
-            return Move(lru.key, "demote", tier_name, lru.method, lru.rate,
-                        lru.nbytes, 0.0, dst_tier=next_tier)
-        return Move(lru.key, "evict", tier_name, lru.method, lru.rate,
-                    lru.nbytes, 0.0)
+            return Move(meta.key, "demote", tier_name, meta.method,
+                        meta.rate, meta.nbytes, 0.0, dst_tier=next_tier)
+        return Move(meta.key, "evict", tier_name, meta.method, meta.rate,
+                    meta.nbytes, 0.0)
+
+    def selector_halflife_s(self, key: str) -> Optional[float]:
+        return None     # recency key is time-invariant between touches
+
+    def selector_recency_key(self, meta: EntryMeta):
+        return (meta.last_hit or meta.created_at, -_page_depth(meta.key))
+
+    def pick_move_scan(self, tier_name: str, entries: Sequence[EntryMeta],
+                       now: float, kv_lookup=None) -> Optional[Move]:
+        if not entries:
+            return None
+        lru = min(entries, key=self.selector_recency_key)
+        return self.entry_best_move(tier_name, lru, now,
+                                    kv_lookup=kv_lookup)
+
+    def pick_move(self, tier_name: str, entries: Sequence[EntryMeta],
+                  now: float, kv_lookup=None) -> Optional[Move]:
+        return self.pick_move_scan(tier_name, entries, now,
+                                   kv_lookup=kv_lookup)

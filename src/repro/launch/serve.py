@@ -152,6 +152,12 @@ def main(argv=None) -> int:
                          "causality, write fencing, transfer accounting; "
                          "read-only — results are bit-identical; also "
                          "enabled by SIMCHECK=1)")
+    ap.add_argument("--selector", default="indexed",
+                    choices=["indexed", "scan"],
+                    help="placement selection engine: incremental "
+                         "per-tier move heaps (indexed, amortized "
+                         "O(log N)) or the reference full scan — "
+                         "decisions are identical (docs/perf.md)")
     ap.add_argument("--serialized", action="store_true",
                     help="use the legacy load-blocking loop (baseline)")
     ap.add_argument("--seed", type=int, default=0)
@@ -205,7 +211,8 @@ def main(argv=None) -> int:
                        depth_discount=args.depth_discount,
                        fused_compute=args.fused_compute,
                        fused_residual_frac=residual_frac,
-                       sanitize=args.sanitize)
+                       sanitize=args.sanitize,
+                       selector=args.selector)
     if args.fit_estimator and args.policy == "adaptive":
         fit_quality_estimator(rig, contexts)
         print("quality estimator fitted")
@@ -221,7 +228,8 @@ def main(argv=None) -> int:
                                else None),
                   readahead_stats=(rig.engine.readahead_stats
                                    if args.readahead_pages
-                                   and not args.serialized else None))
+                                   and not args.serialized else None),
+                  selector_stats=rig.controller.selector.stats)
     print("\n=== serving summary ===")
     for k, v in s.items():
         print(f"  {k:16s} {v:.4f}" if isinstance(v, float) else

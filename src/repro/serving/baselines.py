@@ -65,7 +65,8 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
                  depth_discount: float = 0.85,
                  fused_compute: bool = False,
                  fused_residual_frac: float = 0.0,
-                 sanitize: bool = False) -> EngineRig:
+                 sanitize: bool = False,
+                 selector: str = "indexed") -> EngineRig:
     methods = default_registry()
     smoke_cfg = runner.model.cfg
     if topology is None:
@@ -126,7 +127,8 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
 
     clock = SimClock()
     ctrl = AdaptCacheController(methods, tiers, order, pol, delay_profile,
-                                freq, clock=clock, topology=topology)
+                                freq, clock=clock, topology=topology,
+                                selector=selector)
     # composed-quality pricing: match_prefix scores each served piece
     # through the same estimator the adaptive policy optimizes with, so
     # FetchPlan.quality / RequestResult.composed_quality are consistent

@@ -353,6 +353,7 @@ class ServingEngine:
         self._ref_cache: Dict[str, List[int]] = {}
         self._prefill_cache: Dict[str, Any] = {}
         self.last_trace: List[Tuple[float, str, Dict[str, Any]]] = []
+        self.last_event_count = 0
         # runtime invariant checking (SimSanitizer): explicit flag or
         # the SIMCHECK env toggle (CI runs the smoke replays under it).
         # The sanitizer only OBSERVES — results are bit-identical.
@@ -468,6 +469,14 @@ class ServingEngine:
             else None)
         if san is not None:
             loop.sanitizer = san
+            # arm the incremental selector's reference cross-check:
+            # every Nth pick_move re-runs the full scan and asserts the
+            # identical move. Read-only (counters aside), so sanitized
+            # runs stay bit-identical to unsanitized ones.
+            sel = self.controller.selector
+            if getattr(sel, "name", "") == "indexed" \
+                    and sel.crosscheck_every == 0:
+                sel.crosscheck_every = 7
             san.watch_channels(channels.values())
             san.watch_channels(wchannels.values())
             san.watch_channels(r.prefill_chan for r in replicas)
@@ -1176,6 +1185,10 @@ class ServingEngine:
 
         if san is not None:
             san.finish(loop.now)
+        # simulator-throughput numerator for the scale benchmark: how
+        # many events this run handled (wall-clock is measured by the
+        # benchmark harness, never in here)
+        self.last_event_count = loop.processed
         results.sort(key=lambda r: (r.arrival_s, r.req_id))
         return results
 
@@ -1253,7 +1266,8 @@ class ServingEngine:
 def summarize(results: Sequence[RequestResult],
               prefetch_stats: Optional[Dict[str, int]] = None,
               chunk_stats: Optional[Dict[str, float]] = None,
-              readahead_stats: Optional[Dict[str, int]] = None
+              readahead_stats: Optional[Dict[str, int]] = None,
+              selector_stats: Optional[Dict[str, int]] = None
               ) -> Dict[str, float]:
     if not results:
         return {"n": 0}
@@ -1329,4 +1343,11 @@ def summarize(results: Sequence[RequestResult],
         # wasted (demoted unused) / cancelled (run diverged)
         out.update({f"readahead_{k}": v
                     for k, v in readahead_stats.items()})
+    if selector_stats is not None:
+        # placement-selector work counters (controller.selector.stats):
+        # picks issued, entries scored, lazy-heap garbage discarded,
+        # moves applied, cross-checks run — selection cost in event
+        # counts, wall-clock-free (timing lives in benchmark harnesses)
+        out.update({f"selector_{k}": v
+                    for k, v in selector_stats.items()})
     return out

@@ -25,6 +25,14 @@ Invariants asserted (``SanitizerError`` names the offending event/key):
   start before the write's completion time.
 * **transfer accounting** — every booked ``Transfer`` is matched by
   exactly one ``EV_WRITE_DONE``; at end-of-run no transfer is leaked.
+* **index consistency** — the executor's per-tier resident index (the
+  incremental selector's ground set) agrees with ``controller.meta``
+  and every tier inventory after every event.
+
+Sanitized runs additionally arm the indexed selector's cross-check
+(``IndexedSelector.crosscheck_every``): sampled ``pick_move`` calls
+re-run the reference scan and assert the identical move — see
+``repro.core.selector`` and docs/perf.md.
 """
 from __future__ import annotations
 
@@ -143,6 +151,7 @@ class SimSanitizer:
             self._fail(
                 f"after '{ev}' at t={now_s:.9f}: controller places key "
                 f"'{k}' in tier '{tname}' but the tier does not hold it")
+        self._check_tier_index(now_s, ev)
         for ch in self._channels:
             prev_s = self._busy_s[id(ch)]
             if ch.busy_s < prev_s - EPS:
@@ -151,6 +160,38 @@ class SimSanitizer:
                     f"'{getattr(ch, 'name', ch)}' busy time moved "
                     f"backward ({prev_s:.9f} -> {ch.busy_s:.9f})")
             self._busy_s[id(ch)] = ch.busy_s
+
+    def _check_tier_index(self, now_s: float, ev: str) -> None:
+        """Index-consistency invariant: the executor's per-tier resident
+        index (the incremental placement selector's ground set) must
+        agree with both ``controller.meta`` placements and each tier's
+        inventory after every event — an index drifting out of sync
+        would silently change selection decisions. Fault-injection
+        controllers without an executor are exempt."""
+        executor = getattr(self.controller, "executor", None)
+        index = getattr(executor, "tier_index", None)
+        if index is None:
+            return
+        for tname, tier in self.controller.tiers.items():
+            indexed = index.get(tname, {})
+            resident = set(tier.keys())
+            if set(indexed) != resident:
+                extra = sorted(set(indexed) - resident)
+                missing = sorted(resident - set(indexed))
+                self._fail(
+                    f"after '{ev}' at t={now_s:.9f}: tier '{tname}' "
+                    f"index disagrees with the tier inventory "
+                    f"(index-only: {extra[:5]}, tier-only: {missing[:5]})")
+            for k, m in indexed.items():
+                if self.controller.meta.get(k) is not m:
+                    self._fail(
+                        f"after '{ev}' at t={now_s:.9f}: tier '{tname}' "
+                        f"index holds a stale meta object for key '{k}'")
+                if m.tier != tname:
+                    self._fail(
+                        f"after '{ev}' at t={now_s:.9f}: key '{k}' sits "
+                        f"in tier '{tname}' index but its meta says "
+                        f"tier={m.tier!r}")
 
     # -- end-of-run ----------------------------------------------------------
     def finish(self, now_s: float) -> None:

@@ -135,6 +135,48 @@ def make_prefix_sharing_contexts(rng: np.random.RandomState, vocab: int,
     return out
 
 
+def make_heavy_traffic_contexts(rng: np.random.RandomState, vocab: int,
+                                n_docs: int, n_variants: int = 2,
+                                prefix_len: int = 64,
+                                suffix_len: int = 48,
+                                n_probes: int = 1,
+                                tasks: Sequence[str] = (
+                                    "qa", "summarization", "coding"),
+                                ) -> List[Context]:
+    """Heavy-traffic corpus: the prefix-sharing generator at population
+    scale (thousands of contexts) with SHORT contexts, so a serving run
+    is dominated by cache-population effects (insert/enforce/readahead
+    placement work) rather than model compute. Same keying and task
+    cycling as ``make_prefix_sharing_contexts``."""
+    return make_prefix_sharing_contexts(
+        rng, vocab, n_docs, n_variants, prefix_len=prefix_len,
+        suffix_len=suffix_len, n_probes=n_probes, tasks=tasks)
+
+
+def bursty_requests(rng: np.random.RandomState, contexts: List[Context],
+                    n_requests: int, burst_size: int = 8,
+                    burst_gap_s: float = 0.25,
+                    intra_gap_s: float = 0.004,
+                    zipf_a: float = 1.3,
+                    max_new_tokens: int = 4) -> List[Request]:
+    """Bursty skewed arrivals for the heavy-traffic scale benchmark:
+    requests land in bursts of ``burst_size`` (``intra_gap_s`` apart)
+    separated by ``burst_gap_s``, and context popularity is Zipf over a
+    seeded permutation — a few hot documents absorb most traffic while
+    a long cold tail churns the cache. Fully determined by ``rng``."""
+    reqs = []
+    order = rng.permutation(len(contexts))
+    for i in range(n_requests):
+        burst, pos = divmod(i, burst_size)
+        t = burst * burst_gap_s + pos * intra_gap_s
+        ci = order[int(rng.zipf(zipf_a)) % len(contexts)]
+        ctx = contexts[ci]
+        q = ctx.probes[int(rng.randint(len(ctx.probes)))]
+        reqs.append(Request(i, ctx.key, q, t, ctx.task_type,
+                            max_new_tokens))
+    return reqs
+
+
 def round_robin_requests(contexts: List[Context], n_requests: int,
                          interarrival_s: float, max_new_tokens: int = 24,
                          start_s: float = 0.0) -> List[Request]:
