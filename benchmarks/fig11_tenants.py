@@ -1,0 +1,353 @@
+"""Multi-tenant SLO benchmark: budgeted compute ticks + tenant quotas.
+
+Three self-checking experiments on the unified-compute event engine:
+
+  (1) prefill storm — a latency-critical high-priority tenant ("chat",
+      tier 0, short contexts, decode-heavy) serves steadily while a
+      batch tenant ("agent", tier 2, long contexts) lands a burst of
+      cold whole-context prefills on the SAME unified compute channel.
+      FIFO interleave (``token_budget=0``) books every ready chunk
+      ahead of the next decode tick, so decode inter-token latency
+      blows past the single-chunk ceiling. The Sarathi-style budgeted
+      tick (``token_budget=CHUNK``) admits at most one budget of chunk
+      tokens per tick in (tier, deadline) priority order, so the chat
+      tenant's p99 ITL stays bounded by one chunk's service time. The
+      self-check asserts BOTH sides: FIFO violates the ITL ceiling,
+      budgeted holds it (and the max decode-tick delay obeys the
+      single-chunk bound only under the budget).
+
+  (2) quota pressure — the diurnal multi-tenant workload runs with
+      per-tenant resident-byte quotas sized well below each tenant's
+      working set. The self-check asserts every quota'd tenant ends
+      within its quota, quota evictions actually fired (the cap was
+      binding, not slack), and the per-tenant ledgers agree with the
+      controller's resident inventory.
+
+  (3) degenerate replay — with tenants off and the budget off, the
+      engine must be bit-identical to the pre-tenant engine: fig10's
+      heavy-traffic population (docs=8, indexed selector) is re-run
+      through ``fig10_scale.run_selector`` and every deterministic
+      column must match the committed ``experiments/fig10_scale.csv``
+      row (wall-clock columns and the SIMCHECK-dependent ``crosschecks``
+      counter excluded; a missing artifact is a FAILURE, never a skip).
+
+    PYTHONPATH=src python benchmarks/fig11_tenants.py [--smoke]
+
+Emits experiments/fig11_tenants.csv and BENCH_fig11.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import fig8_evicpress as f8  # noqa: E402
+import fig10_scale as f10  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.serving.baselines import build_engine  # noqa: E402
+from repro.serving.engine import summarize  # noqa: E402
+from repro.serving.runner import ModelRunner  # noqa: E402
+from repro.serving.workload import (  # noqa: E402
+    DEFAULT_TENANTS, Request, Tenant, make_prefix_sharing_contexts,
+    make_tenant_workload)
+
+ARCH = f8.ARCH
+N_ACTIVE = f8.N_ACTIVE
+
+CHUNK = 32                  # chunk tokens == per-tick token budget
+#: lane floor — the actual lane count scales with the storm size
+#: (n_storm + 2) so every storm job AND the steady chat traffic hold
+#: lanes concurrently: lane admission is FIFO and out of scope here,
+#: the experiment isolates contention on the unified compute channel
+LANES = 8
+HI_SLO_S = 0.05             # chat TTFT SLO (deadline for chunk ordering)
+
+#: storm tenants: the budget experiment needs exactly the adversarial
+#: pair — a latency-critical decode tenant and a throughput prefill
+#: tenant — so it pins its own rather than reusing DEFAULT_TENANTS
+STORM_TENANTS = (
+    Tenant("chat", tier=0, ttft_slo_s=HI_SLO_S, tasks=("qa",)),
+    Tenant("agent", tier=2, tasks=("coding",)),
+)
+
+QUOTA_TOKENS = {"chat": 512, "rag": 384, "agent": 256}
+
+CSV_KEYS = ["n_requests", "chunks_issued", "chunks_deferred",
+            "tick_delay_max_s", "tick_delay_s", "ticks_delayed",
+            "chat_ttft_p99_s", "chat_itl_p99_s", "agent_ttft_p99_s",
+            "agent_itl_p99_s"]
+
+
+def make_storm(cfg, smoke: bool):
+    """Deterministic storm workload: steady short-context chat traffic
+    with a burst of cold long-context agent prefills landing mid-run.
+    Distinct agent contexts (1 variant per doc) prevent coalescing, so
+    every storm request is a real multi-chunk prefill job."""
+    rng = np.random.RandomState(41)
+    n_chat = 12 if smoke else 24
+    n_storm = 6 if smoke else 10
+    chat_ctx = make_prefix_sharing_contexts(
+        rng, cfg.vocab_size, n_docs=3, n_variants=1, prefix_len=32,
+        suffix_len=16, n_probes=2, tasks=("qa",))
+    # long enough for many chunks per job, short enough to fit the
+    # runner's 256-token decode capacity with the answer appended
+    storm_ctx = make_prefix_sharing_contexts(
+        rng, cfg.vocab_size, n_docs=n_storm, n_variants=1,
+        prefix_len=192, suffix_len=32, n_probes=1, tasks=("coding",))
+    for c in chat_ctx:
+        c.key, c.tenant = f"chat:{c.key}", "chat"
+    for c in storm_ctx:
+        c.key, c.tenant = f"agent:{c.key}", "agent"
+    reqs = []
+    for i in range(n_chat):
+        ctx = chat_ctx[i % len(chat_ctx)]
+        q = ctx.probes[i % len(ctx.probes)]
+        reqs.append(Request(0, ctx.key, q, 0.01 + i * 0.05, ctx.task_type,
+                            max_new_tokens=8, tenant="chat"))
+    for i, ctx in enumerate(storm_ctx):
+        reqs.append(Request(0, ctx.key, ctx.probes[0],
+                            0.30 + i * 0.002, ctx.task_type,
+                            max_new_tokens=1, tenant="agent"))
+    reqs.sort(key=lambda r: (r.arrival_s, r.context_key))
+    for i, r in enumerate(reqs):
+        r.req_id = i
+    return chat_ctx + storm_ctx, reqs
+
+
+def run_storm(runner, full, contexts, requests, *, token_budget: int,
+              label: str, qe, n_lanes: int):
+    """One storm run on the unified compute tick; returns the summary
+    (with per-tenant percentiles + chunk counters) and the single-chunk
+    service ceiling the budgeted run must respect."""
+    rig = build_engine(runner, contexts, full, N_ACTIVE,
+                       policy="adaptive", alpha=f10.ALPHA, quality_est=qe,
+                       dram_entries=6.0, ssd_entries=30.0,
+                       n_lanes=n_lanes,
+                       ssd_root=tempfile.mkdtemp(prefix=f"f11_{label}_"),
+                       chunk_tokens=CHUNK, token_budget=token_budget,
+                       tenants=STORM_TENANTS)
+    res = rig.engine.process(requests, skip_quality=True)
+    s = summarize(res, chunk_stats=rig.engine.chunk_stats)
+    # budgeted-tick ceiling: one tick admits at most ``token_budget``
+    # chunk tokens, so decode is delayed by at most the costliest single
+    # chunk any in-flight job can queue (deepest past offset)
+    max_past = max(len(c.tokens) for c in contexts)
+    ceiling_s = rig.engine.tm.chunk_prefill_s(CHUNK, max_past)
+    return s, ceiling_s
+
+
+def run_quota(runner, full, qe):
+    """Diurnal multi-tenant run with binding per-tenant quotas; returns
+    the summary plus the per-tenant residency/quota audit."""
+    cfg = runner.model.cfg
+    rng = np.random.RandomState(53)
+    tenants = [Tenant(t.name, tier=t.tier,
+                      quota_tokens=QUOTA_TOKENS[t.name],
+                      ttft_slo_s=t.ttft_slo_s, rate_scale=t.rate_scale,
+                      phase=t.phase, tasks=t.tasks)
+               for t in DEFAULT_TENANTS]
+    contexts, requests = make_tenant_workload(
+        rng, cfg.vocab_size, n_docs_per_tenant=4, tenants=tenants,
+        base_rate_hz=30.0, duration_s=3.0)
+    rig = build_engine(runner, contexts, full, N_ACTIVE,
+                       policy="adaptive", alpha=f10.ALPHA, quality_est=qe,
+                       dram_entries=2.0, ssd_entries=10.0, n_lanes=4,
+                       ssd_root=tempfile.mkdtemp(prefix="f11_quota_"),
+                       tenants=tenants)
+    res = rig.engine.process(requests, skip_quality=True)
+    s = summarize(res)
+    tok_bytes = cfg.kv_bytes_per_token() * 2.0
+    audit = {}
+    for t in tenants:
+        quota_b = int(t.quota_tokens * tok_bytes)
+        resident = rig.controller.tenant_resident_bytes(t.name)
+        audit[t.name] = {"quota_bytes": quota_b,
+                         "resident_bytes": resident,
+                         "within": resident <= quota_b}
+    return s, audit, rig.controller.counters["quota_evictions"], len(requests)
+
+
+# deterministic fig10 columns: everything except wall-clock and the
+# SIMCHECK-armed crosscheck counter (the committed CSV is generated
+# without SIMCHECK; CI replays with it)
+DEGEN_INT_KEYS = ["n_contexts", "n_requests", "n_entries", "events",
+                  "pick_move_calls", "entries_scored", "heap_pushes",
+                  "heap_revalidations", "moves_applied"]
+DEGEN_FLOAT_KEYS = list(f10.METRIC_KEYS)
+
+
+def load_fig10_row(path: str, n_docs: int, selector: str):
+    """fig10's CSV carries a string ``selector`` column, which the
+    shared numeric-row loader cannot parse — read it directly here.
+    A missing artifact is a FAILURE, never a silent skip."""
+    assert os.path.exists(path), (
+        f"committed fig10 artifact {path} is missing — regenerate it "
+        f"with: PYTHONPATH=src python benchmarks/fig10_scale.py --smoke "
+        f"--out-csv {path}")
+    with open(path) as fh:
+        header = fh.readline().strip().split(",")
+        for line in fh:
+            vals = line.strip().split(",")
+            row = dict(zip(header, vals))
+            if int(row["n_docs"]) == n_docs and row["selector"] == selector:
+                return row
+    raise AssertionError(
+        f"no (n_docs={n_docs}, selector={selector}) row in {path}")
+
+
+def check_degenerate_fig10(runner, full, qe) -> float:
+    """Tenants off + budget off must leave the engine bit-identical to
+    the committed pre-tenant fig10 smoke row (indexed selector,
+    smallest population)."""
+    n_docs = f10.SMOKE_DOCS[0]
+    ref = load_fig10_row("experiments/fig10_scale.csv", n_docs, "indexed")
+    cfg = runner.model.cfg
+    contexts, requests = f10.make_population(cfg, n_docs, smoke=True)
+    prefills = {c.key: runner.prefill_entry(c.tokens) for c in contexts}
+    row, _ = f10.run_selector(runner, contexts, full, prefills, requests,
+                              selector="indexed", label="degen10", qe=qe)
+    drift = 0.0
+    for k in DEGEN_INT_KEYS:
+        assert int(row[k]) == int(ref[k]), (
+            f"tenants-off engine drifted from committed fig10 row: "
+            f"{k} = {row[k]} vs committed {ref[k]}")
+    for k in DEGEN_FLOAT_KEYS:
+        d = abs(float(row[k]) - float(ref[k]))
+        drift = max(drift, d)
+        assert d <= 1.5e-6, (
+            f"tenants-off engine drifted from committed fig10 row: "
+            f"{k} = {row[k]} vs committed {ref[k]} (|d|={d:.3g})")
+    return drift
+
+
+def main(out_csv: str = "experiments/fig11_tenants.csv",
+         out_json: str = "BENCH_fig11.json", smoke: bool = False):
+    cfg = get_config(ARCH, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    runner = ModelRunner(model, params, capacity=256)
+    full = get_config(ARCH)
+    qe = f8.make_quality_estimator()
+
+    # ---- (1) prefill storm: FIFO vs budgeted tick ----
+    contexts, requests = make_storm(cfg, smoke)
+    n_storm = sum(1 for c in contexts if c.tenant == "agent")
+    n_lanes = max(LANES, n_storm + 2)
+    rows = {}
+    for label, budget in [("fifo", 0), ("budgeted", CHUNK)]:
+        s, ceiling_s = run_storm(runner, full, contexts, requests,
+                                 token_budget=budget, label=label, qe=qe,
+                                 n_lanes=n_lanes)
+        rows[label] = s
+        print(f"{label:9s} chat p99 itl={s['tenant_chat_itl_p99_s']:.6f}s "
+              f"ttft={s['tenant_chat_ttft_p99_s']:.6f}s "
+              f"tick_delay_max={s['chunk_tick_delay_max_s']:.6f}s "
+              f"deferred={s['chunk_chunks_deferred']}")
+    fifo, budgeted = rows["fifo"], rows["budgeted"]
+    # the budget must actually engage, and the storm must actually storm
+    assert budgeted["chunk_chunks_deferred"] > 0, \
+        "budgeted run never deferred a chunk — the storm is too weak"
+    assert fifo["chunk_chunks_deferred"] == 0, \
+        "FIFO run deferred chunks — budget leaked into the baseline"
+    # the SLO contract: FIFO lets queued storm chunks delay a decode
+    # tick beyond the single-chunk ceiling; the budgeted tick cannot
+    assert fifo["chunk_tick_delay_max_s"] > ceiling_s, (
+        f"prefill storm too weak: FIFO max decode-tick delay "
+        f"{fifo['chunk_tick_delay_max_s']:.6f}s never exceeded the "
+        f"single-chunk ceiling {ceiling_s:.6f}s")
+    assert budgeted["chunk_tick_delay_max_s"] <= ceiling_s + 1e-9, (
+        f"budgeted tick violated the single-chunk bound: max decode "
+        f"delay {budgeted['chunk_tick_delay_max_s']:.6f}s > ceiling "
+        f"{ceiling_s:.6f}s")
+    assert (budgeted["tenant_chat_itl_p99_s"]
+            < fifo["tenant_chat_itl_p99_s"]), (
+        f"budgeted tick did not improve chat p99 ITL: "
+        f"{budgeted['tenant_chat_itl_p99_s']:.6f}s vs FIFO "
+        f"{fifo['tenant_chat_itl_p99_s']:.6f}s")
+    # the TTFT SLO itself: deadline-ordered budgeted admission holds the
+    # chat tenant's p99 TTFT under its SLO while FIFO busts it
+    assert budgeted["tenant_chat_ttft_p99_s"] <= HI_SLO_S, (
+        f"budgeted run missed the chat TTFT SLO: p99 "
+        f"{budgeted['tenant_chat_ttft_p99_s']:.6f}s > {HI_SLO_S}s")
+    assert fifo["tenant_chat_ttft_p99_s"] > HI_SLO_S, (
+        f"storm too weak: FIFO held the chat TTFT SLO anyway (p99 "
+        f"{fifo['tenant_chat_ttft_p99_s']:.6f}s)")
+    print(f"storm: budget bounds chat p99 ITL "
+          f"({budgeted['tenant_chat_itl_p99_s']:.6f}s vs FIFO "
+          f"{fifo['tenant_chat_itl_p99_s']:.6f}s; single-chunk ceiling "
+          f"{ceiling_s:.6f}s)")
+
+    # ---- (2) quota pressure ----
+    qs, audit, quota_evictions, n_quota_reqs = run_quota(runner, full, qe)
+    for name, a in audit.items():
+        print(f"quota {name:6s} resident={a['resident_bytes']:8d} "
+              f"quota={a['quota_bytes']:8d} within={a['within']}")
+    assert quota_evictions > 0, (
+        "quota run never evicted — the quotas were not binding; "
+        "shrink QUOTA_TOKENS or grow the workload")
+    for name, a in audit.items():
+        assert a["within"], (
+            f"tenant '{name}' ended over quota: "
+            f"{a['resident_bytes']} > {a['quota_bytes']} bytes")
+    print(f"quota: all tenants within quota after {quota_evictions} "
+          f"quota evictions over {n_quota_reqs} requests")
+
+    # ---- (3) degenerate fig10 replay ----
+    drift = check_degenerate_fig10(runner, full, qe)
+    print(f"degenerate check: committed fig10 (docs={f10.SMOKE_DOCS[0]}, "
+          f"indexed) replays with tenants+budget off (max drift "
+          f"{drift:.2e})")
+
+    if os.path.dirname(out_csv):
+        os.makedirs(os.path.dirname(out_csv), exist_ok=True)
+    with open(out_csv, "w") as f:
+        f.write("mode," + ",".join(CSV_KEYS) + "\n")
+        for label in ["fifo", "budgeted"]:
+            s = rows[label]
+            vals = {"n_requests": s["n"],
+                    "chunks_issued": s["chunk_chunks_issued"],
+                    "chunks_deferred": s["chunk_chunks_deferred"],
+                    "tick_delay_max_s": s["chunk_tick_delay_max_s"],
+                    "tick_delay_s": s["chunk_tick_delay_s"],
+                    "ticks_delayed": s["chunk_ticks_delayed"],
+                    "chat_ttft_p99_s": s["tenant_chat_ttft_p99_s"],
+                    "chat_itl_p99_s": s["tenant_chat_itl_p99_s"],
+                    "agent_ttft_p99_s": s["tenant_agent_ttft_p99_s"],
+                    "agent_itl_p99_s": s["tenant_agent_itl_p99_s"]}
+            f.write(f"{label}," + ",".join(
+                f"{vals[k]:.6f}" if isinstance(vals[k], float)
+                else str(vals[k]) for k in CSV_KEYS) + "\n")
+    with open(out_json, "w") as f:
+        json.dump({"benchmark": "fig11_tenants", "smoke": smoke,
+                   "chunk_tokens": CHUNK, "token_budget": CHUNK,
+                   "storm": {label: {k: rows[label][k]
+                                     for k in rows[label]
+                                     if k.startswith(("tenant_", "chunk_"))
+                                     or k == "n"}
+                             for label in rows},
+                   "quota": {"audit": audit,
+                             "quota_evictions": quota_evictions,
+                             "n_requests": n_quota_reqs},
+                   "degenerate_fig10_drift": drift}, f, indent=2)
+    print(f"wrote {out_csv} and {out_json}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller storm for the CI benchmark-smoke job: "
+                         "every self-check (SLO bound, quota hold, "
+                         "degenerate fig10 replay) still asserts")
+    ap.add_argument("--out-csv", default="experiments/fig11_tenants.csv")
+    ap.add_argument("--out-json", default="BENCH_fig11.json")
+    args = ap.parse_args()
+    main(out_csv=args.out_csv, out_json=args.out_json, smoke=args.smoke)

@@ -18,6 +18,9 @@
   fig10_scale         —      — heavy-traffic population sweep: scan vs
                                indexed placement selection (bit-identical
                                serving, simulator wall-clock speedup)
+  fig11_tenants       —      — multi-tenant SLO serving: budgeted compute
+                               ticks bound high-priority decode ITL under
+                               a prefill storm; per-tenant quotas hold
   tab_alpha_hitrate   §3     — DRAM hit rate vs alpha sweep
   estimator_curves    §2     — offline quality-rate profiling
   kernel_bench        —      — Pallas-op microbenches (CSV contract)
@@ -40,10 +43,11 @@ def main() -> None:
 
     os.makedirs("experiments", exist_ok=True)
     from benchmarks import (estimator_curves, fig1_hitrate, fig10_scale,
-                            fig2_ttft_quality, fig3_overlap, fig4_prefetch,
-                            fig5_topology, fig6_paging, fig7_readahead,
-                            fig8_evicpress, fig9_fused, kernel_bench,
-                            roofline_bench, tab_alpha_hitrate)
+                            fig11_tenants, fig2_ttft_quality, fig3_overlap,
+                            fig4_prefetch, fig5_topology, fig6_paging,
+                            fig7_readahead, fig8_evicpress, fig9_fused,
+                            kernel_bench, roofline_bench,
+                            tab_alpha_hitrate)
     suites = [
         ("kernel_bench", kernel_bench.main),
         ("roofline_bench", roofline_bench.main),
@@ -61,6 +65,7 @@ def main() -> None:
             ("fig8_evicpress", fig8_evicpress.main),
             ("fig9_fused", fig9_fused.main),
             ("fig10_scale", fig10_scale.main),
+            ("fig11_tenants", fig11_tenants.main),
             ("tab_alpha_hitrate", tab_alpha_hitrate.main),
         ]
     for name, fn in suites:

@@ -176,7 +176,7 @@ class AdaptCacheController:
                          "prefetches": 0, "hit_remote": 0,
                          "page_runs": 0, "page_run_hits": 0,
                          "page_runs_full": 0, "page_runs_partial": 0,
-                         "page_runs_miss": 0,
+                         "page_runs_miss": 0, "quota_evictions": 0,
                          **{f"hit_{t}": 0 for t in tier_order}}
         # placement selection engine: "indexed" (amortized O(log N)
         # lazy move heaps) or "scan" (the reference full scan) — both
@@ -186,6 +186,21 @@ class AdaptCacheController:
         # optional: callers (tests, the SIMCHECK cross-check harness)
         # set this to a list to record every applied enforcement Move
         self.move_log: Optional[List[Move]] = None
+        # per-tenant resident-byte quotas (tenant name -> bytes; empty =
+        # quotas off, zero behavior change). Inserts stamped with a
+        # quoted tenant trigger quota eviction BEFORE capacity
+        # enforcement, so a storming tenant sheds its own coldest bytes
+        # instead of flushing other tenants' hot sets.
+        self.tenant_quotas: Dict[str, int] = {}
+
+    def set_tenant_quotas(self, quotas: Dict[str, int]) -> None:
+        """Install per-tenant resident-byte quotas (<= 0 = unlimited)."""
+        self.tenant_quotas = {name: int(b) for name, b in quotas.items()
+                              if b and b > 0}
+
+    def tenant_resident_bytes(self, tenant: str) -> int:
+        """The tenant's resident footprint across all tiers (ledger)."""
+        return self.executor.tenant_resident_bytes(tenant)
 
     # -- public API -----------------------------------------------------------
     def lookup(self, key: str) -> Optional[str]:
@@ -195,7 +210,8 @@ class AdaptCacheController:
     def insert(self, key: str, kv: KVData, task_type: str,
                now: Optional[float] = None,
                transfers: Optional[List[Transfer]] = None,
-               replica: Optional[int] = None) -> Placement:
+               replica: Optional[int] = None,
+               tenant: Optional[str] = None) -> Placement:
         now = self.clock() if now is None else now
         old = self.meta.get(key)
         if old is not None and old.tier:
@@ -212,12 +228,14 @@ class AdaptCacheController:
             meta.redundancy = redundancy_feature(kv)
             meta.created_at = now
             meta.home_replica = replica
+            meta.tenant = tenant
         else:
             meta = EntryMeta(key=key, task_type=task_type,
                              n_tokens=kv_num_tokens(kv),
                              orig_bytes=kv_nbytes(kv),
                              redundancy=redundancy_feature(kv),
-                             created_at=now, home_replica=replica)
+                             created_at=now, home_replica=replica,
+                             tenant=tenant)
         placement = self.policy.admit(meta, kv)
         self.executor.store(meta, kv, placement)
         self.meta[key] = meta
@@ -227,6 +245,10 @@ class AdaptCacheController:
         self.selector.touch(key, now)
         if transfers is not None:
             transfers.append(Transfer(key, "insert", meta.tier, meta.nbytes))
+        # quota BEFORE capacity: an over-quota tenant's insert storm
+        # sheds its own coldest entries first, which usually also fixes
+        # the tier overflow — other tenants' hot sets survive
+        self._enforce_quota(tenant, now)
         self._enforce(placement.tier, now, transfers=transfers)
         return placement
 
@@ -433,6 +455,33 @@ class AdaptCacheController:
         self._enforce(fast, now, transfers=transfers)
         return tr
 
+    # -- per-tenant quota enforcement -------------------------------------------
+    def _enforce_quota(self, tenant: Optional[str], now: float,
+                       max_moves: int = 10000) -> None:
+        """Evict the tenant's own least valuable residents until its
+        ledger fits its quota. Evictions free bytes without writing any
+        (no Transfer), exactly like capacity-enforcement evicts; the
+        victim order is ``policy.quota_victim_key`` (LRU for fixed
+        policies, utility-per-byte for the adaptive one)."""
+        if not tenant or not self.tenant_quotas:
+            return
+        quota = self.tenant_quotas.get(tenant, 0)
+        if quota <= 0:
+            return
+        moves = 0
+        while (self.executor.tenant_resident_bytes(tenant) > quota
+               and moves < max_moves):
+            move = self.selector.pick_quota_victim(tenant, now)
+            if move is None:
+                break
+            meta = self.meta[move.key]
+            self.executor.apply(move, meta)
+            self.selector.touch(move.key, now)
+            self.counters["quota_evictions"] += 1
+            if self.move_log is not None:
+                self.move_log.append(move)
+            moves += 1
+
     # -- capacity enforcement ---------------------------------------------------
     def _entries_in(self, tier_name: str):
         # per-tier executor index in insertion-seq order: identical to
@@ -488,4 +537,13 @@ class AdaptCacheController:
             out[f"hit_rate_{t}"] = (self.counters[f"hit_{t}"] / total
                                     if total else 0.0)
             out[f"used_{t}"] = self.tiers[t].used_bytes
+        # per-tenant resident footprints from the executor ledger —
+        # only present when tenanted entries exist, so untenanted runs
+        # keep their exact stats schema
+        tenants = sorted({ten
+                          for bucket in self.executor.tenant_ledger.values()
+                          for ten in bucket if ten})
+        for ten in tenants:
+            out[f"tenant_bytes_{ten}"] = \
+                self.executor.tenant_resident_bytes(ten)
         return out

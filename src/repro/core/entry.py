@@ -22,6 +22,9 @@ class EntryMeta:
     # entry — per-replica DRAM placement prices cross-replica copies for
     # any other replica's DRAM; None means topology-blind (shared DRAM)
     home_replica: Optional[int] = None
+    # owning tenant name: per-tenant resident-byte ledgers and quota
+    # enforcement key off it; None = untenanted (single-tenant runs)
+    tenant: Optional[str] = None
     # stats
     hits: int = 0
     last_hit: float = 0.0

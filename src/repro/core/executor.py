@@ -40,6 +40,13 @@ class Executor:
         # SimSanitizer audits it against meta + tier inventories.
         self.tier_index: Dict[str, Dict[str, EntryMeta]] = {
             name: {} for name in tiers}
+        # per-tenant resident-byte ledger: tier -> tenant -> stored
+        # bytes, updated at every placement mutation alongside the tier
+        # index (untenanted entries bucket under ""). Quota enforcement
+        # reads it instead of scanning meta; the SimSanitizer audits it
+        # against the per-tier inventories after every event.
+        self.tenant_ledger: Dict[str, Dict[str, int]] = {
+            name: {} for name in tiers}
         self._seq = itertools.count()
 
     # -- per-tier index -------------------------------------------------------
@@ -48,6 +55,31 @@ class Executor:
             self.tier_index.get(old_tier, {}).pop(meta.key, None)
         if meta.tier is not None:
             self.tier_index.setdefault(meta.tier, {})[meta.key] = meta
+
+    # -- per-tenant ledger ----------------------------------------------------
+    def _ledger_move(self, meta: EntryMeta, old_tier: Optional[str],
+                     old_nbytes: int) -> None:
+        """Mirror a placement mutation into the tenant ledger: remove
+        the entry's OLD bytes from its old tier bucket, add its current
+        bytes to its current one (zeroed buckets are dropped so the
+        ledger only lists live tenants)."""
+        ten = meta.tenant or ""
+        if old_tier is not None and old_nbytes:
+            bucket = self.tenant_ledger.setdefault(old_tier, {})
+            left = bucket.get(ten, 0) - old_nbytes
+            if left:
+                bucket[ten] = left
+            else:
+                bucket.pop(ten, None)
+        if meta.tier is not None and meta.nbytes:
+            bucket = self.tenant_ledger.setdefault(meta.tier, {})
+            bucket[ten] = bucket.get(ten, 0) + meta.nbytes
+
+    def tenant_resident_bytes(self, tenant: str) -> int:
+        """The tenant's resident footprint summed across all tiers."""
+        ten = tenant or ""
+        return sum(bucket.get(ten, 0)
+                   for bucket in self.tenant_ledger.values())
 
     def entries_in(self, tier_name: str) -> List[EntryMeta]:
         """Tier residents in insertion-sequence order — exactly the
@@ -69,12 +101,13 @@ class Executor:
         m = self.methods[placement.method]
         entry = m.compress(kv, placement.rate)
         nb = self.tiers[placement.tier].put(meta.key, entry)
-        old_tier = meta.tier
+        old_tier, old_nb = meta.tier, meta.nbytes
         meta.tier = placement.tier
         meta.method = placement.method
         meta.rate = entry.rate
         meta.nbytes = nb
         self._index_move(meta, old_tier)
+        self._ledger_move(meta, old_tier, old_nb)
         self.proxies[meta.key] = shape_proxy(self._decompressed_view(entry, m))
         return nb
 
@@ -116,6 +149,7 @@ class Executor:
         old_tier = meta.tier
         meta.tier = dst_name
         self._index_move(meta, old_tier)
+        self._ledger_move(meta, old_tier, meta.nbytes)
         self.stats["promote"] += 1
         self.stats["bytes_moved"] += entry.nbytes
         return entry.nbytes
@@ -126,10 +160,11 @@ class Executor:
         tier = self.tiers[move.tier]
         if move.kind == "evict":
             tier.evict(meta.key)
-            old_tier = meta.tier
+            old_tier, old_nb = meta.tier, meta.nbytes
             meta.tier = None
             meta.nbytes = 0
             self._index_move(meta, old_tier)
+            self._ledger_move(meta, old_tier, old_nb)
             self.proxies.pop(meta.key, None)
             self.stats["evict"] += 1
             return None
@@ -145,6 +180,7 @@ class Executor:
             old_tier = meta.tier
             meta.tier = dst_name
             self._index_move(meta, old_tier)
+            self._ledger_move(meta, old_tier, meta.nbytes)
             self.stats["demote"] += 1
             self.stats["bytes_moved"] += entry.nbytes
             return meta.tier
@@ -156,9 +192,11 @@ class Executor:
             new_entry = m.compress(kv, move.rate)
             tier.evict(meta.key)
             nb = tier.put(meta.key, new_entry)
+            old_nb = meta.nbytes
             meta.method = move.method
             meta.rate = new_entry.rate
             meta.nbytes = nb
+            self._ledger_move(meta, meta.tier, old_nb)
             self.proxies[meta.key] = shape_proxy(
                 self._decompressed_view(new_entry, m))
             self.stats["recompress"] += 1

@@ -129,6 +129,17 @@ class BasePolicy:
         ``selector_halflife_s`` is None): smaller selects first."""
         raise NotImplementedError
 
+    def quota_victim_key(self, meta: EntryMeta, now: float):
+        """Total order for per-tenant QUOTA eviction (smaller evicts
+        first). Unlike capacity enforcement — which frees bytes in one
+        over-full tier — quota eviction must shrink a tenant's TOTAL
+        resident footprint, so demotion doesn't help and the victim is
+        evicted outright. Default is LRU with the paged depth tie-break
+        (``FixedPolicy.selector_recency_key`` semantics); ``seq`` makes
+        the order total."""
+        return (meta.last_hit or meta.created_at, -_page_depth(meta.key),
+                meta.seq)
+
     def next_tier(self, tier_name: str) -> Optional[str]:
         """Demotion target for ``tier_name`` (None: evict-only tier)."""
         if self.topology is not None:
@@ -345,6 +356,12 @@ class AdaptivePolicy(BasePolicy):
             if run_key is not None and self.run_freq.seen(run_key):
                 return self.run_freq.halflife
         return self.freq.halflife
+
+    def quota_victim_key(self, meta: EntryMeta, now: float):
+        """Quota eviction drops the tenant's least valuable resident
+        bytes: current utility per stored byte, ascending."""
+        return (self.current_utility(meta, now) / max(1, meta.nbytes),
+                meta.seq)
 
 
 def _page_depth(key: str) -> int:

@@ -60,6 +60,35 @@ def _fresh_stats() -> Dict[str, int]:
             "moves_applied": 0, "crosschecks": 0}
 
 
+def pick_quota_victim(controller, tenant: str, now: float
+                      ) -> Optional[Move]:
+    """Per-tenant QUOTA eviction pick, shared by both selectors.
+
+    Scans the over-quota tenant's residents slowest tier first (cold
+    deep bytes leave before hot fast ones) and returns an evict ``Move``
+    for the entry with the smallest ``policy.quota_victim_key``. Quota
+    pressure only ever touches the owing tenant's own entries, so this
+    is a tenant-filtered scan over the executor's per-tier index — rare
+    (only fires while a tenant is over quota) and trivially
+    decision-identical between the scan and indexed selectors, which is
+    why it lives outside the per-tier move heaps."""
+    ten = tenant or ""
+    policy = controller.policy
+    for tname in reversed(controller.tier_order):
+        best = None
+        for m in controller.executor.entries_in(tname):
+            if (m.tenant or "") != ten:
+                continue
+            k = policy.quota_victim_key(m, now)
+            if best is None or k < best[0]:
+                best = (k, m)
+        if best is not None:
+            victim = best[1]
+            return Move(victim.key, "evict", tname, victim.method,
+                        victim.rate, victim.nbytes, 0.0)
+    return None
+
+
 class ScanSelector:
     """Reference selection: every pick re-scans the tier via
     ``policy.pick_move_scan`` (the pre-indexed behavior, preserved
@@ -94,6 +123,9 @@ class ScanSelector:
 
     def begin_sim(self, tier_name: str, now: float) -> "_ScanSim":
         return _ScanSim(self, tier_name)
+
+    def pick_quota_victim(self, tenant: str, now: float) -> Optional[Move]:
+        return pick_quota_victim(self.c, tenant, now)
 
 
 class _ScanSim:
@@ -300,6 +332,12 @@ class IndexedSelector:
     def begin_sim(self, tier_name: str, now: float) -> "_IndexedSim":
         self._check_epoch(now)
         return _IndexedSim(self, tier_name)
+
+    def pick_quota_victim(self, tenant: str, now: float) -> Optional[Move]:
+        # shared tenant-filtered scan (see module function): quota picks
+        # bypass the move heaps entirely, so no heap maintenance here —
+        # the controller's post-apply touch() removes the stale record
+        return pick_quota_victim(self.c, tenant, now)
 
 
 class _IndexedSim:

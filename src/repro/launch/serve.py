@@ -44,7 +44,9 @@ from repro.models import build_model
 from repro.serving.baselines import build_engine, fit_quality_estimator
 from repro.serving.engine import summarize
 from repro.serving.runner import ModelRunner
-from repro.serving.workload import make_contexts, poisson_requests
+from repro.serving.workload import (
+    DEFAULT_TENANTS, make_contexts, make_tenant_workload, poisson_requests,
+)
 from repro.storage.topology import StorageTopology
 from repro.training.data import Pipeline, PipelineConfig
 from repro.training.optimizer import AdamWConfig, wsd_schedule
@@ -158,6 +160,22 @@ def main(argv=None) -> int:
                          "per-tier move heaps (indexed, amortized "
                          "O(log N)) or the reference full scan — "
                          "decisions are identical (docs/perf.md)")
+    ap.add_argument("--tenants", type=int, default=0, metavar="N",
+                    help="serve a multi-tenant diurnal workload mixing the "
+                         "first N default tenants (chat/rag/agent: "
+                         "priority tier, token quota, TTFT SLO) instead "
+                         "of the single-tenant Poisson mix (0 = off)")
+    ap.add_argument("--token-budget", type=int, default=0, metavar="T",
+                    help="per-tick prefill token budget on the unified "
+                         "compute channel: each tick admits at most T "
+                         "chunk tokens (tier/deadline priority order) "
+                         "before booking decode, bounding decode "
+                         "inter-token latency under prefill storms "
+                         "(0 = FIFO interleave; requires --chunk-tokens)")
+    ap.add_argument("--slo", type=float, default=0.0, metavar="S",
+                    help="override every tenant's TTFT SLO to S seconds "
+                         "for deadline-based chunk ordering (0 keeps "
+                         "each tenant's own SLO; requires --tenants)")
     ap.add_argument("--serialized", action="store_true",
                     help="use the legacy load-blocking loop (baseline)")
     ap.add_argument("--seed", type=int, default=0)
@@ -165,6 +183,11 @@ def main(argv=None) -> int:
     if (args.readahead_pages or args.remainder_cache) and not args.paged:
         ap.error("--readahead-pages and --remainder-cache are page-native "
                  "features: add --paged")
+    if args.token_budget and not args.chunk_tokens:
+        ap.error("--token-budget budgets the unified compute tick: add "
+                 "--chunk-tokens")
+    if args.slo and not args.tenants:
+        ap.error("--slo overrides tenant TTFT SLOs: add --tenants")
 
     smoke_cfg = get_config(args.arch, smoke=True)
     full_cfg = get_config(args.arch)
@@ -172,9 +195,25 @@ def main(argv=None) -> int:
     runner = ModelRunner(model, params, capacity=1024)
 
     rng = np.random.RandomState(args.seed)
-    contexts = make_contexts(rng, smoke_cfg.vocab_size,
-                             args.contexts_per_task, n_probes=3)
-    requests = poisson_requests(rng, contexts, args.rate, args.duration)
+    tenants = None
+    if args.tenants:
+        import dataclasses as _dc
+        tenants = list(DEFAULT_TENANTS[:args.tenants])
+        if args.slo:
+            tenants = [_dc.replace(t, ttft_slo_s=args.slo)
+                       for t in tenants]
+        contexts, requests = make_tenant_workload(
+            rng, smoke_cfg.vocab_size,
+            n_docs_per_tenant=args.contexts_per_task,
+            tenants=tenants, base_rate_hz=args.rate,
+            duration_s=args.duration)
+        print(f"{len(tenants)} tenants: "
+              + ", ".join(f"{t.name}(tier={t.tier}, "
+                          f"quota={t.quota_tokens}tok)" for t in tenants))
+    else:
+        contexts = make_contexts(rng, smoke_cfg.vocab_size,
+                                 args.contexts_per_task, n_probes=3)
+        requests = poisson_requests(rng, contexts, args.rate, args.duration)
     print(f"{len(contexts)} contexts, {len(requests)} requests")
 
     if args.policy in ("adaptive", "prefill"):
@@ -212,7 +251,9 @@ def main(argv=None) -> int:
                        fused_compute=args.fused_compute,
                        fused_residual_frac=residual_frac,
                        sanitize=args.sanitize,
-                       selector=args.selector)
+                       selector=args.selector,
+                       token_budget=args.token_budget,
+                       tenants=tenants)
     if args.fit_estimator and args.policy == "adaptive":
         fit_quality_estimator(rig, contexts)
         print("quality estimator fitted")

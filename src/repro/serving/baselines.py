@@ -29,7 +29,7 @@ from repro.core.policy import AdaptivePolicy, FixedPolicy
 from repro.serving.engine import ServingEngine
 from repro.serving.runner import ModelRunner
 from repro.serving.timemodel import A100, DeviceModel, TimeModel
-from repro.serving.workload import Context
+from repro.serving.workload import Context, Tenant
 from repro.storage.tier import DRAMTier, DeviceSpec, SSDTier
 from repro.storage.topology import StorageTopology
 
@@ -66,7 +66,9 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
                  fused_compute: bool = False,
                  fused_residual_frac: float = 0.0,
                  sanitize: bool = False,
-                 selector: str = "indexed") -> EngineRig:
+                 selector: str = "indexed",
+                 token_budget: int = 0,
+                 tenants: Optional[Sequence[Tenant]] = None) -> EngineRig:
     methods = default_registry()
     smoke_cfg = runner.model.cfg
     if topology is None:
@@ -134,6 +136,16 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
     # FetchPlan.quality / RequestResult.composed_quality are consistent
     # across adaptive and fixed-rate baselines
     ctrl.quality_est = qe
+    # multi-tenant SLO knobs: tenant quotas are declared in TOKENS and
+    # converted to stored smoke-scale bytes with the same per-token
+    # factor the tiers are sized with, so a quota of N tokens holds the
+    # same tier fraction at any scale; zero/absent quotas enforce nothing
+    tenant_map = {t.name: t for t in tenants} if tenants else None
+    if tenant_map:
+        tok_bytes = smoke_cfg.kv_bytes_per_token() * 2.0
+        ctrl.set_tenant_quotas(
+            {t.name: int(t.quota_tokens * tok_bytes)
+             for t in tenant_map.values() if t.quota_tokens > 0})
     tm = TimeModel(full_cfg, device, n_active_params)
     eng = ServingEngine(runner, ctrl, tm, contexts, n_replicas=n_replicas,
                         n_lanes=n_lanes, sim_clock=clock,
@@ -144,7 +156,8 @@ def build_engine(runner: ModelRunner, contexts: Sequence[Context],
                         page_tokens=page_tokens, chunk_tokens=chunk_tokens,
                         affinity=affinity, readahead_pages=readahead_pages,
                         remainder_cache=remainder_cache,
-                        fused_compute=fused_compute, sanitize=sanitize)
+                        fused_compute=fused_compute, sanitize=sanitize,
+                        token_budget=token_budget, tenants=tenant_map)
     return EngineRig(eng, ctrl, qe, clock)
 
 

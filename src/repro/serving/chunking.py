@@ -268,7 +268,8 @@ class PagedPrefixCache:
                        task_type: str, now: Optional[float] = None,
                        transfers: Optional[List[Transfer]] = None,
                        replica: Optional[int] = None,
-                       keys: Optional[List[str]] = None) -> InsertOutcome:
+                       keys: Optional[List[str]] = None,
+                       tenant: Optional[str] = None) -> InsertOutcome:
         """Admit the pageable prefix of ``kv`` as page entries.
 
         Pages are stamped with the inserting replica (``home_replica``)
@@ -295,7 +296,7 @@ class PagedPrefixCache:
             for i in missing:
                 self.controller.insert(keys[i], pages[i], task_type,
                                        now=now, transfers=transfers,
-                                       replica=replica)
+                                       replica=replica, tenant=tenant)
         rem_stored = False
         if self.remainder and rem_tokens > 0:
             rkey = remainder_key(tokens, self.page_tokens)
@@ -304,7 +305,7 @@ class PagedPrefixCache:
                     self.controller.insert(
                         rkey, tail_kv(kv, n_pages * self.page_tokens),
                         task_type, now=now, transfers=transfers,
-                        replica=replica)
+                        replica=replica, tenant=tenant)
                 rem_stored = True
         return InsertOutcome(
             inserted=len(missing), pages=n_pages,

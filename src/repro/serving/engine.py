@@ -123,6 +123,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import math
 import os
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -143,10 +144,21 @@ from repro.serving.scheduler import (
 from repro.serving.timemodel import (
     ComputeChannel, TimeModel, build_tier_channels,
 )
-from repro.serving.workload import Context, Request
+from repro.serving.workload import Context, Request, Tenant
 from repro.storage.topology import StorageTopology
 
 DEFAULT_IO_STREAMS = {"dram": 8, "ssd": 1}
+
+
+def _fresh_chunk_stats() -> Dict[str, float]:
+    """Chunked-prefill interleave counters: chunks booked / compute
+    queueing / decode ticks pushed behind a chunk (plus the worst
+    single-tick delay), and the budgeted-tick deferral counters
+    (chunks held for a later tick and the time they waited)."""
+    return {"chunks_issued": 0, "queue_s": 0.0,
+            "ticks_delayed": 0, "tick_delay_s": 0.0,
+            "tick_delay_max_s": 0.0,
+            "chunks_deferred": 0, "defer_wait_s": 0.0}
 
 
 @dataclasses.dataclass
@@ -185,6 +197,15 @@ class RequestResult:
     #                                  composed along the matched run
     #                                  (QualityEstimator.compose); 1.0 for
     #                                  misses (recompute is exact)
+    tenant: Optional[str] = None     # owning tenant (multi-tenant runs);
+    #                                  None = untenanted
+
+    @property
+    def itl_s(self) -> float:
+        """Mean inter-token latency of the generated answer: decode time
+        past the first token, per generated token after the first."""
+        steps = max(1, len(self.answer) - 1)
+        return max(0.0, self.finish_s - self.arrival_s - self.ttft_s) / steps
 
 
 @dataclasses.dataclass
@@ -268,13 +289,19 @@ class ServingEngine:
                  readahead_pages: int = 0,
                  remainder_cache: bool = False,
                  fused_compute: bool = False,
-                 sanitize: bool = False):
+                 sanitize: bool = False,
+                 token_budget: int = 0,
+                 tenants: Optional[Dict[str, Tenant]] = None):
         if n_replicas < 1 or n_lanes < 1:
             raise ValueError("need at least one replica with one lane")
         if (readahead_pages > 0 or remainder_cache) and page_tokens <= 0:
             raise ValueError(
                 "readahead_pages / remainder_cache are page-native "
                 "features: enable paged serving (page_tokens > 0) first")
+        if token_budget > 0 and chunk_tokens <= 0:
+            raise ValueError(
+                "token_budget is a chunked-prefill feature: enable the "
+                "unified compute tick (chunk_tokens > 0) first")
         self.runner = runner
         self.controller = controller
         # storage topology: per-replica DRAM routing, cross-replica hit
@@ -337,8 +364,16 @@ class ServingEngine:
         # chunks on ONE unified compute channel per replica that decode
         # ticks also book (0 = dedicated prefill stream, legacy timing)
         self.chunk_tokens = chunk_tokens
-        self.chunk_stats = {"chunks_issued": 0, "queue_s": 0.0,
-                            "ticks_delayed": 0, "tick_delay_s": 0.0}
+        self.chunk_stats = _fresh_chunk_stats()
+        # Sarathi-style per-tick prefill token budget (see LaneSet):
+        # bounds the prefill tokens fused ahead of each decode step; 0 =
+        # FIFO interleave (chunks book the channel when ready, legacy
+        # timing). Queued chunks order by (tenant tier, deadline).
+        self.token_budget = token_budget
+        # tenant registry (name -> Tenant): scheduling priority tiers +
+        # deadlines for budgeted chunk reordering. Quotas are installed
+        # on the CONTROLLER (set_tenant_quotas), not here.
+        self.tenants: Dict[str, Tenant] = dict(tenants) if tenants else {}
         # fused compute path (kernels/fused_prefill): attention consumes
         # the packed prefix directly, so fused-eligible matched pieces
         # price their RESIDENT bytes on the HBM-bound terms of
@@ -428,8 +463,7 @@ class ServingEngine:
                                "suppressed": 0}
         self.readahead_stats = {"issued": 0, "hits": 0, "wasted": 0,
                                 "cancelled": 0, "piggybacked": 0}
-        self.chunk_stats = {"chunks_issued": 0, "queue_s": 0.0,
-                            "ticks_delayed": 0, "tick_delay_s": 0.0}
+        self.chunk_stats = _fresh_chunk_stats()
         # per-tier channels: duplex tiers get independent read/write
         # queues (writes priced by Tier.store_delay_s); a half-duplex SSD
         # REUSES its read channel for writes, so serving reads,
@@ -460,10 +494,12 @@ class ServingEngine:
             for i in range(self.n_replicas)]
         if self.chunk_tokens > 0:
             # unified compute: decode ticks and prefill chunks share ONE
-            # single-stream channel per replica (see LaneSet.tick)
+            # single-stream channel per replica (see LaneSet.tick);
+            # token_budget > 0 arms the budgeted tick on every replica
             for r in replicas:
                 r.compute_chan = ComputeChannel(f"compute{r.idx}")
                 r.compute_stats = self.chunk_stats
+                r.token_budget = self.token_budget
         san = self.last_sanitizer = (
             SimSanitizer(self.controller, EVENT_NAMES) if self.sanitize
             else None)
@@ -740,11 +776,29 @@ class ServingEngine:
                      if tier is not None else None)
             return replicas[owner] if owner is not None else base
 
+        def chunk_priority(job: _PagedJob, n_new: int):
+            """Queued-chunk order for the budgeted tick: tenant tier
+            first (0 = highest priority), then the request's TTFT
+            deadline (``arrival + ttft_slo_s``; no SLO = last within
+            the tier), then arrival — so under a low-priority storm the
+            high-priority tenant's chunks cut the queue. The req_id /
+            chunk-index tail makes the key total (heap never compares
+            the fire closure)."""
+            ten = self.tenants.get(job.ctx.tenant or "")
+            tier = ten.tier if ten is not None else (1 << 30)
+            deadline = (job.req.arrival_s + ten.ttft_slo_s
+                        if ten is not None and ten.ttft_slo_s > 0
+                        else math.inf)
+            return (tier, deadline, job.req.arrival_s, job.req.req_id,
+                    job.ci)
+
         def issue_chunk(job: _PagedJob, now: float) -> None:
             """Book the next suffix-prefill chunk. Chunked mode books
             the replica's unified compute channel (contending with
-            decode ticks); chunking off books the legacy dedicated
-            prefill stream with the monolithic prefill cost."""
+            decode ticks) — immediately in FIFO mode, via the replica's
+            budgeted priority queue when token_budget > 0; chunking off
+            books the legacy dedicated prefill stream with the
+            monolithic prefill cost."""
             n_new, n_past = job.chunks[job.ci]
             if self.chunk_tokens > 0:
                 # fused pricing: the matched span of the past context is
@@ -758,14 +812,29 @@ class ServingEngine:
                     kvb = dense * (m * job.kv_frac + (n_past - m)) / n_past
                 svc = self.tm.chunk_prefill_s(n_new, n_past,
                                               kv_bytes_per_token=kvb)
-                start, end = job.rep.compute_chan.book(now, svc)
-                # interleave counters track the UNIFIED tick only — a
-                # monolithic suffix on the dedicated stream is not a chunk
-                self.chunk_stats["chunks_issued"] += 1
-                self.chunk_stats["queue_s"] += start - now
-            else:
-                svc = self.tm.prefill_s(n_new)
-                start, end = job.rep.prefill_chan.book(now, svc)
+                ci = job.ci
+
+                def fire(t: float, n_new=n_new, svc=svc, ci=ci) -> float:
+                    start, end = job.rep.compute_chan.book(t, svc)
+                    # interleave counters track the UNIFIED tick only —
+                    # a monolithic suffix on the dedicated stream is not
+                    # a chunk
+                    self.chunk_stats["chunks_issued"] += 1
+                    self.chunk_stats["queue_s"] += start - t
+                    note(t, "chunk_issue", req_id=job.req.req_id,
+                         replica=job.rep.idx, idx=ci, n_new=n_new,
+                         done=end)
+                    loop.push(end, EV_CHUNK_DONE, job)
+                    return end
+
+                if self.token_budget > 0:
+                    job.rep.submit_chunk(chunk_priority(job, n_new),
+                                         n_new, fire, now, loop=loop)
+                else:
+                    fire(now)
+                return
+            svc = self.tm.prefill_s(n_new)
+            start, end = job.rep.prefill_chan.book(now, svc)
             note(now, "chunk_issue", req_id=job.req.req_id,
                  replica=job.rep.idx, idx=job.ci, n_new=n_new, done=end)
             loop.push(end, EV_CHUNK_DONE, job)
@@ -780,12 +849,14 @@ class ServingEngine:
                 if job.insert_whole:
                     self.controller.insert(
                         job.req.context_key, job.kv_final, job.insert_task,
-                        now=now, transfers=transfers, replica=rep.idx)
+                        now=now, transfers=transfers, replica=rep.idx,
+                        tenant=job.ctx.tenant)
                 else:
                     out = self.paged.insert_context(
                         job.ctx.tokens, self._prefill_kv(job.ctx),
                         job.insert_task, now=now, transfers=transfers,
-                        replica=rep.idx, keys=pkeys(job.ctx))
+                        replica=rep.idx, keys=pkeys(job.ctx),
+                        tenant=job.ctx.tenant)
                     note(now, "page_insert", req_id=job.req.req_id,
                          inserted=out.inserted, pages=out.pages,
                          remainder_tokens=out.remainder_tokens)
@@ -867,9 +938,14 @@ class ServingEngine:
                 return []
             if self.chunk_tokens <= 0:
                 return [(suffix, past)]
+            # budgeted tick: a chunk must fit inside one tick's token
+            # budget or the drain could never release it (Sarathi sizes
+            # chunks to the budget by construction)
+            step = (min(self.chunk_tokens, self.token_budget)
+                    if self.token_budget > 0 else self.chunk_tokens)
             out, off = [], 0
             while off < suffix:
-                n = min(self.chunk_tokens, suffix - off)
+                n = min(step, suffix - off)
                 out.append((n, past + off))
                 off += n
             return out
@@ -1099,9 +1175,10 @@ class ServingEngine:
                     hit = {"hit_tier": None, "method": "none", "rate": 1.0}
                     if isinstance(extra, str):       # owner of the prefill
                         transfers: List[Transfer] = []
-                        self.controller.insert(req.context_key, kv, extra,
-                                               now=now, transfers=transfers,
-                                               replica=rep.idx)
+                        self.controller.insert(
+                            req.context_key, kv, extra, now=now,
+                            transfers=transfers, replica=rep.idx,
+                            tenant=self.contexts[req.context_key].tenant)
                         rep.inflight.pop(req.context_key, None)
                         booked = book(now, transfers, "insert")
                         for tr, q_s, x_s in booked:
@@ -1176,7 +1253,8 @@ class ServingEngine:
                                                    0.0),
                         remainder_hit=rec.get("remainder_hit", False),
                         composed_quality=rec.get("composed_quality",
-                                                 1.0)))
+                                                 1.0),
+                        tenant=ctx.tenant))
                 issue(rep, now)
                 maybe_prefetch(now, rep)
 
@@ -1217,7 +1295,7 @@ class ServingEngine:
                 prefill_s = self.tm.prefill_s(t)
                 load_s = 0.0
                 self.controller.insert(req.context_key, kv, ctx.task_type,
-                                       now=start)
+                                       now=start, tenant=ctx.tenant)
                 method, rate, tier = "none", 1.0, None
             else:
                 kv = fetched.kv
@@ -1244,7 +1322,8 @@ class ServingEngine:
                 decode_s=decode_s, finish_s=finish,
                 composed_quality=(
                     self._entry_quality(req.context_key, method, rate)
-                    if tier is not None else 1.0)))
+                    if tier is not None else 1.0),
+                tenant=ctx.tenant))
         return results
 
     # -- estimator probe --------------------------------------------------------
@@ -1330,6 +1409,17 @@ def summarize(results: Sequence[RequestResult],
         "composed_quality_mean": float(
             np.mean([r.composed_quality for r in results])),
     }
+    # per-tenant SLO aggregates (TTFT + inter-token latency percentiles)
+    # — emitted only when some result carries a tenant, so untenanted
+    # runs keep their exact historical key set
+    tenants = sorted({r.tenant for r in results if r.tenant})
+    for ten in tenants:
+        tvalid = [r for r in valid if r.tenant == ten]
+        out[f"tenant_{ten}_n"] = sum(r.tenant == ten for r in results)
+        out.update(percentile_summary(
+            f"tenant_{ten}_ttft", np.array([r.ttft_s for r in tvalid])))
+        out.update(percentile_summary(
+            f"tenant_{ten}_itl", np.array([r.itl_s for r in tvalid])))
     if prefetch_stats is not None:
         # engine-level prefetch counters (issued / hits / wasted /
         # deadline-suppressed) folded into the summary row

@@ -23,7 +23,11 @@ def percentile_summary(prefix: str, values: Sequence[float]
                        ) -> Dict[str, float]:
     arr = np.asarray(list(values), dtype=np.float64)
     if arr.size == 0:
-        return {f"{prefix}_mean_s": 0.0}
+        # schema-stable empty sample: CSV writers key columns off the
+        # first row, so dropping p50/p90/p99 here would silently shift
+        # every later row's fields
+        return {f"{prefix}_mean_s": 0.0, f"{prefix}_p50_s": 0.0,
+                f"{prefix}_p90_s": 0.0, f"{prefix}_p99_s": 0.0}
     return {
         f"{prefix}_mean_s": float(arr.mean()),
         f"{prefix}_p50_s": float(np.percentile(arr, 50)),

@@ -28,6 +28,10 @@ Invariants asserted (``SanitizerError`` names the offending event/key):
 * **index consistency** — the executor's per-tier resident index (the
   incremental selector's ground set) agrees with ``controller.meta``
   and every tier inventory after every event.
+* **tenant ledger** — the executor's per-tenant resident-byte ledger
+  (the ground truth quota enforcement reads) agrees with a recount
+  over the resident metas per (tier, tenant), and each tier's buckets
+  sum to its ``used_bytes``, after every event.
 
 Sanitized runs additionally arm the indexed selector's cross-check
 (``IndexedSelector.crosscheck_every``): sampled ``pick_move`` calls
@@ -152,6 +156,7 @@ class SimSanitizer:
                 f"after '{ev}' at t={now_s:.9f}: controller places key "
                 f"'{k}' in tier '{tname}' but the tier does not hold it")
         self._check_tier_index(now_s, ev)
+        self._check_tenant_ledger(now_s, ev)
         for ch in self._channels:
             prev_s = self._busy_s[id(ch)]
             if ch.busy_s < prev_s - EPS:
@@ -192,6 +197,44 @@ class SimSanitizer:
                         f"after '{ev}' at t={now_s:.9f}: key '{k}' sits "
                         f"in tier '{tname}' index but its meta says "
                         f"tier={m.tier!r}")
+
+    def _check_tenant_ledger(self, now_s: float, ev: str) -> None:
+        """Per-tenant ledger invariant: the executor's per-tier tenant
+        byte ledger must agree with a fresh recount over the resident
+        metas after every event, and each tier's buckets must sum to
+        its ``used_bytes`` — a drifting ledger would silently enforce
+        the wrong quota against the wrong tenant. Fault-injection
+        controllers without an executor ledger are exempt."""
+        executor = getattr(self.controller, "executor", None)
+        ledger = getattr(executor, "tenant_ledger", None)
+        if ledger is None:
+            return
+        index = getattr(executor, "tier_index", None)
+        for tname, tier in self.controller.tiers.items():
+            want: Dict[str, int] = {}
+            metas = (index.get(tname, {}).values() if index is not None
+                     else (m for m in self.controller.meta.values()
+                           if m.tier == tname))
+            for m in metas:
+                if m.nbytes:
+                    ten = m.tenant or ""
+                    want[ten] = want.get(ten, 0) + m.nbytes
+            have = ledger.get(tname, {})
+            for ten in sorted(set(want) | set(have)):
+                label = ten or "<untenanted>"
+                if want.get(ten, 0) != have.get(ten, 0):
+                    self._fail(
+                        f"after '{ev}' at t={now_s:.9f}: tenant "
+                        f"'{label}' ledger in tier '{tname}' says "
+                        f"{have.get(ten, 0)} bytes but resident entries "
+                        f"sum to {want.get(ten, 0)} (tenant ledger "
+                        f"leak)")
+            total = sum(have.values())
+            if total != tier.used_bytes:
+                self._fail(
+                    f"after '{ev}' at t={now_s:.9f}: tier '{tname}' "
+                    f"tenant ledger sums to {total} bytes but the tier "
+                    f"accounts used_bytes={tier.used_bytes}")
 
     # -- end-of-run ----------------------------------------------------------
     def finish(self, now_s: float) -> None:

@@ -340,6 +340,55 @@ class LaneSet:
         # dedicated-prefill-stream semantics (bit-identical timing).
         self.compute_chan = None
         self.compute_stats: Optional[Dict[str, float]] = None
+        # Sarathi-style per-tick prefill token budget (unified-compute
+        # mode only): > 0 holds ready prefill chunks in a priority queue
+        # and releases at most ``token_budget`` prefill tokens per
+        # decode tick, fused ahead of the decode step — so a prefill
+        # storm delays each decode tick by at most the budgeted chunk
+        # time instead of the whole backlog. 0 = legacy FIFO interleave
+        # (chunks book the channel the moment they are ready).
+        self.token_budget = 0
+        # heap of (priority, n_new_tokens, t_enqueue, fire) — priority
+        # is supplied by the caller (tenant tier, deadline, seq) and
+        # fire(now) performs the actual channel booking + event push
+        self.chunk_queue: List[Tuple[Any, int, float, Callable]] = []
+
+    def submit_chunk(self, priority, n_new: int, fire: Callable,
+                     now: float, loop: Optional[EventLoop] = None) -> None:
+        """Budgeted-mode chunk admission: chunks queue in priority order
+        and the tick chain drains them within the token budget — armed
+        on demand, so even with no decode running the backlog releases
+        at paced chunk boundaries instead of dumping onto the channel (a
+        lane admitted mid-storm then waits at most ~one budget of chunk
+        time, never the whole backlog). Budget off books immediately
+        (legacy FIFO interleave)."""
+        if self.token_budget <= 0 or loop is None:
+            fire(now)
+            return
+        heapq.heappush(self.chunk_queue, (priority, n_new, now, fire))
+        if self.compute_stats is not None:
+            self.compute_stats["chunks_deferred"] += 1
+        self.ensure_tick(loop, now)
+
+    def _drain_chunks(self, now: float,
+                      budget: Optional[int]) -> Optional[float]:
+        """Fire queued chunks in priority order; ``budget`` caps the
+        released prefill tokens (None = unbounded drain). Returns the
+        latest completion time ``fire`` reported, so an idle chain can
+        re-arm at the released chunks' boundary."""
+        t_last: Optional[float] = None
+        while self.chunk_queue:
+            if budget is not None and self.chunk_queue[0][1] > budget:
+                break
+            _, n_new, t_enq, fire = heapq.heappop(self.chunk_queue)
+            if budget is not None:
+                budget -= n_new
+            if self.compute_stats is not None:
+                self.compute_stats["defer_wait_s"] += now - t_enq
+            end = fire(now)
+            if end is not None:
+                t_last = end if t_last is None else max(t_last, end)
+        return t_last
 
     def free_lanes(self) -> List[int]:
         return [i for i in self.batcher.free_lanes()
@@ -376,9 +425,31 @@ class LaneSet:
         the finished results, or None when all lanes are idle (the chain
         stops until the next admission re-arms it)."""
         if not any(s.active for s in self.batcher.slots):
+            # no decode to protect, but the queue must still make
+            # progress or the jobs waiting on chunk completions would
+            # deadlock: release one budget's worth and re-arm the chain
+            # at the released chunks' boundary, keeping the channel
+            # backlog at most one budget deep for any lane admitted
+            # mid-drain
+            if self.token_budget > 0 and self.chunk_queue:
+                t_next = self._drain_chunks(now, self.token_budget)
+                if self.chunk_queue and t_next is not None \
+                        and t_next > now:
+                    loop.push(t_next, EV_TICK, self)
+                    return None
+            # chunks are clamped to the budget so the paced drain always
+            # progresses; an un-paceable leftover (fire with no
+            # completion time) falls back to the unbounded dump
+            self._drain_chunks(now, None)
             self._tick_scheduled = False
             return None
         if self.compute_chan is not None:
+            # budgeted mode: release up to token_budget queued prefill
+            # tokens FIRST — they book the channel at ``now``, so the
+            # decode step lands right behind exactly the budgeted chunk
+            # time (the Sarathi fused step), never the whole backlog
+            if self.token_budget > 0:
+                self._drain_chunks(now, self.token_budget)
             # unified compute: reserve the decode step on the shared
             # channel first — a prefill chunk already holding it pushes
             # the step (and every result it stamps) past the chunk
@@ -389,6 +460,9 @@ class LaneSet:
             if self.compute_stats is not None and start > now:
                 self.compute_stats["ticks_delayed"] += 1
                 self.compute_stats["tick_delay_s"] += start - now
+                self.compute_stats["tick_delay_max_s"] = max(
+                    self.compute_stats.get("tick_delay_max_s", 0.0),
+                    start - now)
             done, _ = self.batcher.tick(start)
             loop.push(end, EV_TICK, self)
             return done

@@ -15,9 +15,46 @@ trained model:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Tenant:
+    """One serving tenant: a scheduling priority tier, a resident-KV
+    token quota, and an arrival-rate profile.
+
+    ``tier`` orders deadline-based chunk scheduling (0 = highest
+    priority); ``quota_tokens`` caps the tenant's RESIDENT cache
+    footprint across the whole hierarchy (0 = unlimited — the
+    controller converts tokens to bytes at its KV entry density);
+    ``ttft_slo_s`` stamps the per-request deadline used to order queued
+    prefill chunks (0 = no deadline, FIFO within the tier).
+    ``rate_scale`` / ``phase`` shape the tenant's diurnal arrival rate
+    in ``make_tenant_workload``."""
+    name: str
+    tier: int = 0
+    quota_tokens: int = 0
+    ttft_slo_s: float = 0.0
+    rate_scale: float = 1.0
+    phase: float = 0.0           # diurnal phase offset, fraction of period
+    tasks: Tuple[str, ...] = ("qa",)
+
+
+# the paper-style production mix: interactive chat (latency-critical,
+# hot small contexts), RAG search (long shared documents), and batch
+# agents (code-heavy, throughput traffic) — offset diurnal peaks so one
+# tenant's storm hits another's steady state
+DEFAULT_TENANTS: Tuple[Tenant, ...] = (
+    Tenant("chat", tier=0, quota_tokens=4096, ttft_slo_s=0.05,
+           rate_scale=1.0, phase=0.0, tasks=("qa",)),
+    Tenant("rag", tier=1, quota_tokens=2048, ttft_slo_s=0.25,
+           rate_scale=0.7, phase=0.33, tasks=("qa", "summarization")),
+    Tenant("agent", tier=2, quota_tokens=1024, ttft_slo_s=0.0,
+           rate_scale=0.5, phase=0.66, tasks=("coding",)),
+)
 
 
 @dataclasses.dataclass
@@ -26,6 +63,7 @@ class Context:
     task_type: str
     tokens: np.ndarray           # (T,) int32
     probes: List[np.ndarray]     # question token seqs
+    tenant: Optional[str] = None  # owning tenant name (None = untenanted)
 
 
 @dataclasses.dataclass
@@ -36,6 +74,7 @@ class Request:
     arrival_s: float
     task_type: str
     max_new_tokens: int = 24
+    tenant: Optional[str] = None  # owning tenant name (None = untenanted)
 
 
 def _qa_context(rng, vocab: int, length: int, n_probes: int):
@@ -191,6 +230,68 @@ def round_robin_requests(contexts: List[Context], n_requests: int,
         reqs.append(Request(i, ctx.key, q, start_s + i * interarrival_s,
                             ctx.task_type, max_new_tokens))
     return reqs
+
+
+def make_tenant_workload(rng: np.random.RandomState, vocab: int,
+                         n_docs_per_tenant: int,
+                         tenants: Sequence[Tenant] = DEFAULT_TENANTS,
+                         base_rate_hz: float = 40.0,
+                         duration_s: float = 4.0,
+                         period_s: float = 2.0,
+                         diurnal_amp: float = 0.8,
+                         n_variants: int = 2,
+                         prefix_len: int = 64,
+                         suffix_len: int = 48,
+                         n_probes: int = 1,
+                         zipf_a: float = 1.3,
+                         max_new_tokens: int = 4,
+                         ) -> Tuple[List[Context], List[Request]]:
+    """Multi-tenant heavy-traffic workload: each tenant owns a private
+    heavy-traffic corpus (keys prefixed ``{tenant}:``) and an
+    inhomogeneous-Poisson arrival stream whose rate follows a diurnal
+    sinusoid — ``rate_scale * base_rate_hz * (1 + amp*sin(...))`` with a
+    per-tenant ``phase`` offset, so tenants peak at different times and
+    one tenant's storm lands on another's steady state. Arrivals are
+    drawn by thinning against the per-tenant peak rate; context
+    popularity is Zipf within the tenant. Fully determined by ``rng``
+    (tenant order is the order given). Returns the merged contexts and
+    the arrival-sorted, re-numbered request stream."""
+    contexts: List[Context] = []
+    reqs: List[Request] = []
+    amp = min(max(diurnal_amp, 0.0), 1.0)
+    for ten in tenants:
+        own = make_heavy_traffic_contexts(
+            rng, vocab, n_docs_per_tenant, n_variants=n_variants,
+            prefix_len=prefix_len, suffix_len=suffix_len,
+            n_probes=n_probes, tasks=ten.tasks)
+        for c in own:
+            c.key = f"{ten.name}:{c.key}"
+            c.tenant = ten.name
+        contexts.extend(own)
+        peak_hz = ten.rate_scale * base_rate_hz * (1.0 + amp)
+        if peak_hz <= 0.0:
+            continue
+        order = rng.permutation(len(own))
+        t = 0.0
+        while True:
+            t += rng.exponential(1.0 / peak_hz)
+            u = rng.rand()          # thin even past the horizon: the
+            #                         draw count stays rate-independent
+            if t >= duration_s:
+                break
+            lam = ten.rate_scale * base_rate_hz * (
+                1.0 + amp * math.sin(2.0 * math.pi
+                                     * (t / period_s + ten.phase)))
+            if u * peak_hz > lam:
+                continue
+            ctx = own[order[int(rng.zipf(zipf_a)) % len(own)]]
+            q = ctx.probes[int(rng.randint(len(ctx.probes)))]
+            reqs.append(Request(0, ctx.key, q, t, ctx.task_type,
+                                max_new_tokens, tenant=ten.name))
+    reqs.sort(key=lambda r: (r.arrival_s, r.context_key))
+    for i, r in enumerate(reqs):
+        r.req_id = i
+    return contexts, reqs
 
 
 def poisson_requests(rng: np.random.RandomState, contexts: List[Context],

@@ -104,8 +104,8 @@ class _FakeTier:
 
 
 class _FakeMeta:
-    def __init__(self, tier, nbytes):
-        self.tier, self.nbytes = tier, nbytes
+    def __init__(self, tier, nbytes, tenant=None):
+        self.tier, self.nbytes, self.tenant = tier, nbytes, tenant
 
 
 class _FakeController:
@@ -171,6 +171,62 @@ def test_sanitizer_catches_meta_tier_divergence():
     ctrl.meta["k0"].tier = "ssd"           # controller thinks it moved
     with pytest.raises(SanitizerError):
         san.after_event(1.0, EV_TICK)
+
+
+class _FakeExecutor:
+    """Just enough executor for the tenant-ledger audit (no tier_index:
+    the recount falls back to scanning controller.meta)."""
+
+    def __init__(self, ledger):
+        self.tenant_ledger = ledger
+
+
+def _tenanted_controller():
+    ctrl = _FakeController(
+        tiers={"dram": _FakeTier({"k0": 128, "k1": 64})},
+        meta={"k0": _FakeMeta("dram", 128, tenant="acme"),
+              "k1": _FakeMeta("dram", 64)})
+    ctrl.executor = _FakeExecutor({"dram": {"acme": 128, "": 64}})
+    return ctrl
+
+
+def test_sanitizer_catches_tenant_ledger_leak():
+    """A drifted per-tenant ledger bucket is caught and the error names
+    the tenant — a silent drift would enforce the wrong quota."""
+    ctrl = _tenanted_controller()
+    san = SimSanitizer(ctrl, EVENT_NAMES)
+    san.after_event(1.0, EV_TICK)          # consistent ledger passes
+    ctrl.executor.tenant_ledger["dram"]["acme"] = 64   # inject the leak
+    with pytest.raises(SanitizerError,
+                       match="tenant 'acme'.*tenant ledger leak"):
+        san.after_event(2.0, EV_TICK)
+
+
+def test_sanitizer_catches_untenanted_ledger_leak():
+    ctrl = _tenanted_controller()
+    san = SimSanitizer(ctrl, EVENT_NAMES)
+    ctrl.executor.tenant_ledger["dram"][""] = 32
+    with pytest.raises(SanitizerError,
+                       match="'<untenanted>'.*tenant ledger leak"):
+        san.after_event(1.0, EV_TICK)
+
+
+def test_sanitizer_catches_ghost_tenant_bucket():
+    """A ledger bucket for a tenant with NO resident entries is a leak
+    too (e.g. an eviction that forgot to drop the bucket)."""
+    ctrl = _tenanted_controller()
+    san = SimSanitizer(ctrl, EVENT_NAMES)
+    ctrl.executor.tenant_ledger["dram"]["ghost"] = 32
+    with pytest.raises(SanitizerError,
+                       match="tenant 'ghost'.*tenant ledger leak"):
+        san.after_event(1.0, EV_TICK)
+
+
+def test_sanitizer_ledgerless_controller_exempt():
+    """Fault-injection controllers without an executor ledger skip the
+    tenant audit (the other invariants still run)."""
+    san = SimSanitizer(_consistent_controller(), EVENT_NAMES)
+    san.after_event(1.0, EV_TICK)
 
 
 # -- sanitized end-to-end run -----------------------------------------------

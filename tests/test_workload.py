@@ -1,0 +1,177 @@
+"""Workload generators: determinism, probe validity, prefix sharing,
+arrival-process shape, and the multi-tenant diurnal mix."""
+import numpy as np
+import pytest
+
+from repro.serving.workload import (
+    DEFAULT_TENANTS, Tenant, bursty_requests, make_contexts,
+    make_heavy_traffic_contexts, make_prefix_sharing_contexts,
+    make_tenant_workload, poisson_requests,
+)
+
+VOCAB = 512
+
+
+def _keys(contexts):
+    return [c.key for c in contexts]
+
+
+# -- determinism -------------------------------------------------------------
+
+def test_make_contexts_deterministic():
+    a = make_contexts(np.random.RandomState(7), VOCAB, 2, n_probes=2)
+    b = make_contexts(np.random.RandomState(7), VOCAB, 2, n_probes=2)
+    assert _keys(a) == _keys(b)
+    for ca, cb in zip(a, b):
+        np.testing.assert_array_equal(ca.tokens, cb.tokens)
+        for pa, pb in zip(ca.probes, cb.probes):
+            np.testing.assert_array_equal(pa, pb)
+
+
+def test_request_streams_deterministic():
+    ctxs = make_contexts(np.random.RandomState(7), VOCAB, 2, n_probes=2)
+    for gen in (lambda rng: poisson_requests(rng, ctxs, 5.0, 2.0),
+                lambda rng: bursty_requests(rng, ctxs, 24)):
+        ra = gen(np.random.RandomState(11))
+        rb = gen(np.random.RandomState(11))
+        assert [(r.req_id, r.context_key, r.arrival_s) for r in ra] == \
+               [(r.req_id, r.context_key, r.arrival_s) for r in rb]
+
+
+def test_tenant_workload_deterministic():
+    a = make_tenant_workload(np.random.RandomState(3), VOCAB, 3)
+    b = make_tenant_workload(np.random.RandomState(3), VOCAB, 3)
+    assert _keys(a[0]) == _keys(b[0])
+    assert [(r.req_id, r.context_key, r.arrival_s, r.tenant)
+            for r in a[1]] == \
+           [(r.req_id, r.context_key, r.arrival_s, r.tenant)
+            for r in b[1]]
+
+
+# -- probe validity ----------------------------------------------------------
+
+def test_qa_probes_reference_in_context_keys():
+    """A QA probe is [6, key]: the asked key must actually appear in the
+    context's fact list, or the probe is unanswerable by construction."""
+    ctxs = make_contexts(np.random.RandomState(9), VOCAB, 3,
+                         n_probes=3, tasks=("qa",))
+    for c in ctxs:
+        toks = set(c.tokens.tolist())
+        for p in c.probes:
+            assert p[0] == 6
+            assert int(p[1]) in toks, \
+                f"probe asks for key {int(p[1])} absent from {c.key}"
+
+
+def test_coding_probes_reference_defined_names():
+    """A coding probe is [4, name]: the called name must be defined
+    (follow a ``def`` marker token 3) somewhere in the context."""
+    ctxs = make_contexts(np.random.RandomState(9), VOCAB, 3,
+                         n_probes=3, tasks=("coding",))
+    for c in ctxs:
+        toks = c.tokens.tolist()
+        defined = {toks[i + 1] for i, t in enumerate(toks[:-1]) if t == 3}
+        for p in c.probes:
+            assert p[0] == 4
+            assert int(p[1]) in defined
+
+
+# -- prefix sharing ----------------------------------------------------------
+
+def test_prefix_sharing_variants_share_token_identical_prefix():
+    pre, suf = 96, 32
+    ctxs = make_prefix_sharing_contexts(np.random.RandomState(5), VOCAB,
+                                        n_docs=4, n_variants=3,
+                                        prefix_len=pre, suffix_len=suf)
+    assert len(ctxs) == 12
+    by_doc = {}
+    for c in ctxs:
+        by_doc.setdefault(c.key.rsplit("-v", 1)[0], []).append(c)
+    for doc, variants in by_doc.items():
+        assert len(variants) == 3
+        base = variants[0].tokens
+        for v in variants[1:]:
+            assert len(v.tokens) == len(base)
+            np.testing.assert_array_equal(v.tokens[:pre], base[:pre])
+        # at least one sibling pair diverges in the tail (the corpus
+        # would otherwise be pure exact repeats)
+        tails = {v.tokens[pre:].tobytes() for v in variants}
+        assert len(tails) > 1
+
+
+def test_heavy_traffic_is_prefix_sharing_at_scale():
+    ctxs = make_heavy_traffic_contexts(np.random.RandomState(5), VOCAB,
+                                       n_docs=10)
+    assert len(ctxs) == 20
+    assert all(len(c.tokens) <= 64 + 48 for c in ctxs)
+
+
+# -- arrival processes -------------------------------------------------------
+
+def test_poisson_arrivals_monotone_and_bounded():
+    ctxs = make_contexts(np.random.RandomState(1), VOCAB, 2)
+    reqs = poisson_requests(np.random.RandomState(2), ctxs, 20.0, 3.0)
+    times = [r.arrival_s for r in reqs]
+    assert times == sorted(times)
+    assert all(t < 3.0 + 10.0 for t in times)  # last draw may overshoot
+    assert [r.req_id for r in reqs] == list(range(len(reqs)))
+    # rate sanity: ~60 expected, allow generous slack
+    assert 20 <= len(reqs) <= 140
+
+
+# -- multi-tenant mix --------------------------------------------------------
+
+def test_tenant_workload_tier_quota_mix():
+    tenants = DEFAULT_TENANTS
+    ctxs, reqs = make_tenant_workload(np.random.RandomState(17), VOCAB, 3,
+                                      tenants=tenants, base_rate_hz=30.0,
+                                      duration_s=3.0)
+    by_name = {t.name: t for t in tenants}
+    # every context and request is stamped with a declared tenant, and
+    # context keys are namespaced per tenant
+    for c in ctxs:
+        assert c.tenant in by_name
+        assert c.key.startswith(f"{c.tenant}:")
+    ctx_keys = {c.key for c in ctxs}
+    for r in reqs:
+        assert r.tenant in by_name
+        assert r.context_key in ctx_keys
+        assert r.context_key.startswith(f"{r.tenant}:")
+    # arrival-sorted, contiguously renumbered
+    times = [r.arrival_s for r in reqs]
+    assert times == sorted(times)
+    assert [r.req_id for r in reqs] == list(range(len(reqs)))
+    assert all(0.0 <= t < 3.0 for t in times)
+    # every tenant shows up, and traffic ordering follows rate_scale
+    counts = {name: sum(r.tenant == name for r in reqs)
+              for name in by_name}
+    assert all(v > 0 for v in counts.values()), counts
+    assert counts["chat"] > counts["agent"]
+    # the declared tier/quota profile is distinct across the mix
+    tiers = {t.tier for t in tenants}
+    assert len(tiers) == len(tenants)
+    assert any(t.quota_tokens > 0 for t in tenants)
+    # tenants only draw from their declared task families
+    for c in ctxs:
+        assert c.task_type in by_name[c.tenant].tasks
+
+
+def test_tenant_rate_scale_zero_emits_no_requests():
+    quiet = (Tenant("mute", tier=0, rate_scale=0.0),)
+    ctxs, reqs = make_tenant_workload(np.random.RandomState(2), VOCAB, 2,
+                                      tenants=quiet, duration_s=2.0)
+    assert len(ctxs) == 4 and reqs == []
+
+
+def test_tenant_diurnal_rate_modulates_arrivals():
+    """With full-amplitude diurnal modulation and a single tenant, the
+    peak half-period must carry more arrivals than the trough."""
+    ten = (Tenant("solo", tier=0, rate_scale=1.0, phase=0.0),)
+    _, reqs = make_tenant_workload(np.random.RandomState(19), VOCAB, 2,
+                                   tenants=ten, base_rate_hz=80.0,
+                                   duration_s=2.0, period_s=2.0,
+                                   diurnal_amp=1.0)
+    # sin(2*pi*t/2) > 0 on (0, 1): the first half-period is the peak
+    peak = sum(r.arrival_s < 1.0 for r in reqs)
+    trough = sum(r.arrival_s >= 1.0 for r in reqs)
+    assert peak > trough * 2, (peak, trough)
